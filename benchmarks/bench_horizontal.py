@@ -1,0 +1,79 @@
+"""Figure 10: the MultiPaxos horizontal-reconfiguration baseline also
+reconfigures without performance degradation (alpha >= #clients)."""
+
+from __future__ import annotations
+
+from repro.core.acceptor import Acceptor
+from repro.core.client import Client
+from repro.core.horizontal import HorizontalProposer
+from repro.core.oracle import Oracle
+from repro.core.quorums import Configuration
+from repro.core.replica import NoopSM, Replica
+from repro.core.sim import Simulator
+
+from .common import record, summary, t
+
+
+def run(n_clients: int = 4, alpha: int = 8, seed: int = 0):
+    sim = Simulator(seed=seed)
+    oracle = Oracle()
+    accs = [Acceptor(f"a{i}") for i in range(6)]
+    reps = [Replica(f"r{i}", NoopSM, leader_addrs=("p0",)) for i in range(3)]
+    c0 = Configuration.majority(0, [a.addr for a in accs[:3]])
+    leader = HorizontalProposer(
+        "p0", 0, replicas=tuple(r.addr for r in reps), initial_config=c0,
+        oracle=oracle, alpha=alpha,
+    )
+    clients = [Client(f"c{i}", lambda: "p0") for i in range(n_clients)]
+    for n in [*accs, *reps, leader, *clients]:
+        sim.register(n)
+    leader.become_leader()
+    sim.run_for(0.01)
+    for c in clients:
+        c.start()
+    cid = [1]
+
+    def reconfig():
+        cid[0] += 1
+        pool = [a.addr for a in accs]
+        addrs = sim.rng.sample(pool, 3)
+        leader.reconfigure(Configuration.majority(cid[0], sorted(addrs)))
+
+    for k in range(10):
+        sim.call_at(t(10.0) + t(1.0) * k, reconfig)
+    sim.run_until(t(30.0))
+    for c in clients:
+        c.stop()
+    sim.run_for(t(0.5))
+    oracle.assert_safe()
+    oracle.check_replicas(reps)
+
+    def lats(t0, t1):
+        return [
+            lat * 1e3 for c in clients for (tt, lat) in c.latencies if t0 <= tt < t1
+        ]
+
+    sa, sb = summary(lats(0, t(10.0))), summary(lats(t(10.0), t(20.0)))
+    record(
+        "fig10_horizontal_baseline",
+        clients=n_clients,
+        alpha=alpha,
+        lat_ms_median_quiet=sa["median"],
+        lat_ms_median_reconfig=sb["median"],
+        lat_median_delta_pct=100.0 * (sb["median"] - sa["median"]) / sa["median"],
+        stalls=leader.stall_count,
+        reconfigs=len(leader.reconfig_slots),
+    )
+
+
+def main(fast: bool = True):
+    run(n_clients=4, alpha=8)
+    if not fast:
+        run(n_clients=8, alpha=1)  # the concurrency-limited regime
+
+
+if __name__ == "__main__":
+    main()
+    from .common import emit_csv
+
+    emit_csv()

@@ -1,0 +1,78 @@
+"""Figures 19/20: leader failure -> re-election -> recovery; then the
+triple failure (leader + acceptor + matchmaker) with staged recovery."""
+
+from __future__ import annotations
+
+from repro.core import build
+
+from .common import record, t
+
+
+def run_leader_failure(seed: int = 0):
+    d = build(f=1, n_clients=2, seed=seed)
+    for p in d.proposers:
+        p.opt.auto_election = True
+        p.opt.election_timeout = t(5.0)  # paper: new leader after ~5 s
+    d.proposers[1].start_election_watch(d.random_config)
+    d.start_clients()
+    d.sim.call_at(t(7.0), lambda: d.sim.fail("p0"))
+    d.sim.run_until(t(20.0))
+    d.stop_clients()
+    d.sim.run_for(t(0.5))
+    d.check_all()
+    times = sorted(tt for c in d.clients for (tt, _) in c.latencies)
+    pre = [x for x in times if x < t(7.0)]
+    post = [x for x in times if x > t(7.0)]
+    outage = (post[0] - t(7.0)) if post else float("inf")
+    record(
+        "fig19_leader_failure",
+        completed_before=len(pre),
+        completed_after=len(post),
+        outage_s_unscaled=outage / t(1.0),
+        new_leader=d.proposers[1].is_leader,
+    )
+
+
+def run_triple_failure(seed: int = 1):
+    d = build(f=1, n_clients=2, seed=seed)
+    for p in d.proposers:
+        p.opt.auto_election = True
+        p.opt.election_timeout = t(4.0)
+    d.proposers[1].start_election_watch(d.random_config)
+    d.start_clients()
+
+    def triple():
+        d.sim.fail("p0")
+        d.sim.fail(d.leader.config.acceptors[0])
+        d.sim.fail("mm0")
+
+    d.sim.call_at(t(5.0), triple)
+    # Reconfigure away from the failed acceptor, then the failed matchmaker.
+    d.sim.call_at(t(12.0), d.reconfigure_random)
+    new_mms = tuple(mm.addr for mm in d.standby_matchmakers)
+    d.sim.call_at(t(15.0), lambda: d.reconfigure_matchmakers(new_mms))
+    d.sim.run_until(t(22.0))
+    d.stop_clients()
+    d.sim.run_for(t(0.5))
+    d.check_all()
+    times = sorted(tt for c in d.clients for (tt, _) in c.latencies)
+    thr_recovered = len([x for x in times if x > t(16.0)])
+    record(
+        "fig20_triple_failure",
+        completed_total=len(times),
+        completed_after_recovery=thr_recovered,
+        mm_reconfig_done=d.mm_coordinator.phase == "idle",
+        new_leader=d.proposers[1].is_leader,
+    )
+
+
+def main(fast: bool = True):
+    run_leader_failure()
+    run_triple_failure()
+
+
+if __name__ == "__main__":
+    main()
+    from .common import emit_csv
+
+    emit_csv()

@@ -1,0 +1,76 @@
+"""Figure 9 / Table 1 (+ Figure 11 for f=2): reconfiguration has little to
+no impact on Matchmaker MultiPaxos latency/throughput.
+
+Timeline (paper durations, scaled by common.SCALE):
+  0-10s    no reconfigurations
+  10-20s   the leader reconfigures the acceptors once per second
+  25s      an acceptor fails
+  30s      the leader reconfigures away from the failed acceptor
+"""
+
+from __future__ import annotations
+
+from repro.core import build
+
+from .common import record, summary, t
+
+
+def run(f: int = 1, n_clients: int = 8, seed: int = 0):
+    d = build(f=f, n_clients=n_clients, seed=seed)
+    d.start_clients()
+    n_reconfigs = 10
+    for k in range(n_reconfigs):
+        d.sim.call_at(t(10.0) + t(1.0) * k, d.reconfigure_random)
+
+    def fail_acceptor():
+        victim = d.leader.config.acceptors[0]
+        d.sim.fail(victim)
+
+    d.sim.call_at(t(25.0), fail_acceptor)
+    d.sim.call_at(t(30.0), d.reconfigure_random)
+    d.sim.run_until(t(35.0))
+    d.stop_clients()
+    d.sim.run_for(t(0.5))
+    d.check_all()
+
+    lat_a = [x * 1e3 for x in d.latencies(0, t(10.0))]
+    lat_b = [x * 1e3 for x in d.latencies(t(10.0), t(20.0))]
+    thr_a = d.throughput_samples(0, t(10.0), window=t(1.0), stride=t(0.25))
+    thr_b = d.throughput_samples(t(10.0), t(20.0), window=t(1.0), stride=t(0.25))
+    sa, sb = summary(lat_a), summary(lat_b)
+    ta, tb = summary(thr_a), summary(thr_b)
+    reconf = d.oracle.reconfig_durations[-(n_reconfigs + 1) :]
+    gc = d.oracle.gc_durations
+    row = record(
+        "fig9_reconfiguration",
+        f=f,
+        clients=n_clients,
+        lat_ms_median_quiet=sa["median"],
+        lat_ms_median_reconfig=sb["median"],
+        lat_median_delta_pct=100.0 * (sb["median"] - sa["median"]) / sa["median"],
+        lat_iqr_quiet=sa["iqr"],
+        lat_iqr_reconfig=sb["iqr"],
+        lat_stdev_quiet=sa["stdev"],
+        lat_stdev_reconfig=sb["stdev"],
+        thr_median_quiet=ta["median"],
+        thr_median_reconfig=tb["median"],
+        thr_median_delta_pct=100.0 * (tb["median"] - ta["median"]) / max(ta["median"], 1e-9),
+        reconfig_activation_ms_max=max(reconf) * 1e3 if reconf else 0.0,
+        gc_ms_max=max(gc) * 1e3 if gc else 0.0,
+        stalls=d.leader.stall_count,
+        configs_per_matchmaking_max=max(d.oracle.matchmaking_history_sizes[1:] or [0]),
+    )
+    return row
+
+
+def main(fast: bool = True):
+    for f, clients in ([(1, 1), (1, 4), (1, 8)] if not fast else [(1, 4)]):
+        run(f=f, n_clients=clients)
+    run(f=2, n_clients=2)  # Figure 11
+
+
+if __name__ == "__main__":
+    main()
+    from .common import emit_csv
+
+    emit_csv()

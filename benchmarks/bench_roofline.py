@@ -1,0 +1,53 @@
+"""Roofline table reader: summarizes artifacts/dryrun/*.json (produced by
+repro.launch.dryrun_all) — does NOT recompile (80 cells x ~1 min each)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import summarize_artifact
+
+from .common import record
+
+
+def main(fast: bool = True, out_dir: str = "artifacts/dryrun"):
+    if not os.path.isdir(out_dir):
+        print(f"(no dry-run artifacts under {out_dir}; run repro.launch.dryrun_all)")
+        return
+    arts = []
+    for f in sorted(os.listdir(out_dir)):
+        if f.endswith(".json"):
+            with open(os.path.join(out_dir, f)) as fh:
+                arts.append(json.load(fh))
+    for a in arts:
+        print(summarize_artifact(a))
+        if a.get("skipped"):
+            record(
+                "roofline", arch=a["arch"], shape=a["shape"], mesh=a["mesh"],
+                skipped=a["skipped"][:40],
+            )
+            continue
+        r = a["roofline"]
+        record(
+            "roofline",
+            arch=a["arch"],
+            shape=a["shape"],
+            mesh=a["mesh"],
+            policy=a.get("policy", ""),
+            compute_s=r["compute_s"],
+            memory_s=r["memory_s"],
+            collective_s=r["collective_s"],
+            dominant=r["dominant"],
+            roofline_fraction=r["roofline_fraction"],
+            useful_flops_ratio=a.get("useful_flops_ratio", 0.0),
+            peak_gib=a["memory"]["peak_estimate"] / 2**30,
+            compile_s=a["compile_s"],
+        )
+
+
+if __name__ == "__main__":
+    main()
+    from .common import emit_csv
+
+    emit_csv()

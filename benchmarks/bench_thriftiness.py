@@ -1,0 +1,49 @@
+"""Figures 14/15: thriftiness trades normal-case message cost for failure
+resilience.  We measure Phase2A message counts per command (the cost) and
+completion through an acceptor failure (the resilience)."""
+
+from __future__ import annotations
+
+from repro.core import build
+from repro.core.proposer import Options
+
+from .common import record, t
+
+
+def run(thrifty: bool, fail: bool, seed: int = 0):
+    opts = Options(thrifty=thrifty, phase2_retry_timeout=t(2.5))
+    d = build(f=1, n_clients=4, seed=seed, options=opts)
+    d.start_clients()
+    if fail:
+        d.sim.call_at(t(5.0), lambda: d.sim.fail(d.leader.config.acceptors[0]))
+    d.sim.run_until(t(10.0))
+    d.stop_clients()
+    d.sim.run_for(t(1.0))
+    d.check_all()
+    n_cmds = len(d.oracle.chosen)
+    p2_msgs = sum(a.phase2_count for a in d.acceptors)
+    lat_late = [x * 1e3 for x in d.latencies(t(6.0), t(10.0))]
+    import statistics
+
+    record(
+        "fig14_thriftiness",
+        thrifty=thrifty,
+        acceptor_failure=fail,
+        commands=n_cmds,
+        phase2_votes_per_cmd=p2_msgs / max(n_cmds, 1),
+        lat_ms_median_after=statistics.median(lat_late) if lat_late else 0.0,
+    )
+
+
+def main(fast: bool = True):
+    run(thrifty=True, fail=False)
+    run(thrifty=False, fail=False)
+    run(thrifty=True, fail=True)
+    run(thrifty=False, fail=True)
+
+
+if __name__ == "__main__":
+    main()
+    from .common import emit_csv
+
+    emit_csv()

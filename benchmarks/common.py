@@ -1,0 +1,77 @@
+"""Shared benchmark harness.
+
+The paper's experiments run 20-40 wall-clock seconds on EC2; our
+deterministic simulator reproduces the same *message-level* executions at
+``SCALE=0.1`` of the durations (the protocol is time-scale invariant: all
+claims are about relative behaviour around reconfiguration events, which
+the seeded simulator reproduces exactly).  ``--full`` restores 1:1
+durations.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import sys
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+SCALE = float(os.environ.get("BENCH_SCALE", "0.04"))
+
+RESULTS: List[Dict[str, Any]] = []
+
+
+def t(seconds: float) -> float:
+    """Scale a paper-duration to benchmark time."""
+    return seconds * SCALE
+
+
+def record(name: str, **fields) -> Dict[str, Any]:
+    row = {"bench": name, **fields}
+    RESULTS.append(row)
+    return row
+
+
+def emit_csv(rows: Optional[List[Dict[str, Any]]] = None) -> None:
+    rows = rows if rows is not None else RESULTS
+    keys: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k, "")) for k in keys))
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def summary(xs: Sequence[float]) -> Dict[str, float]:
+    if not xs:
+        return {"median": 0.0, "iqr": 0.0, "stdev": 0.0, "n": 0}
+    xs = sorted(xs)
+    if len(xs) >= 4:
+        q = statistics.quantiles(xs, n=4)
+        iqr = q[2] - q[0]
+    else:
+        iqr = xs[-1] - xs[0]
+    return {
+        "median": statistics.median(xs),
+        "iqr": iqr,
+        "stdev": statistics.pstdev(xs) if len(xs) > 1 else 0.0,
+        "n": len(xs),
+    }
+
+
+class StopWatch:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.wall = time.time() - self.t0

@@ -1,0 +1,41 @@
+"""Section 7 demo: Matchmaker Fast Paxos with f+1 acceptors — the
+theoretical lower bound (classic Paxos needs 2f+1).
+
+Shows the fast path (client -> acceptors -> learner: 2 message delays
+after setup) and conflict recovery when two clients race.
+
+  PYTHONPATH=src python examples/fast_paxos_demo.py
+"""
+
+from repro.core.fast_paxos import FastAcceptor, FastClient, FastCoordinator
+from repro.core.matchmaker import Matchmaker
+from repro.core.oracle import Oracle
+from repro.core.quorums import Configuration
+from repro.core.sim import NetworkConfig, Simulator
+
+for f in (1, 2, 3):
+    sim = Simulator(seed=f, net=NetworkConfig(jitter=0.0))
+    oracle = Oracle()
+    mms = [Matchmaker(f"mm{i}") for i in range(2 * f + 1)]
+    acc_addrs = tuple(f"a{i}" for i in range(f + 1))  # f+1, NOT 2f+1!
+    coord = FastCoordinator(
+        "coord", 0, matchmakers=tuple(m.addr for m in mms), oracle=oracle,
+        config_provider=lambda a: Configuration.fast_f_plus_1(a, acc_addrs), f=f,
+    )
+    accs = [FastAcceptor(a, learners=("coord",)) for a in acc_addrs]
+    clients = [FastClient(f"c{i}", acc_addrs, f"value-{i}") for i in range(2)]
+    for n in [*mms, *accs, coord, *clients]:
+        sim.register(n)
+
+    coord.start_round()     # matchmaking + phase 1 + "any" proactively
+    sim.run_for(0.01)
+    t0 = sim.now
+    for c in clients:       # two clients race on the fast path
+        c.propose()
+    while coord.chosen_value is None:
+        sim.step()
+    oracle.assert_safe()
+    print(f"f={f}: {len(accs)} acceptors (lower bound {f+1}); "
+          f"chose {coord.chosen_value!r} in {(sim.now - t0)*1e3:.2f} ms sim-time "
+          f"({'fast path' if coord.attempt == 1 else 'after conflict recovery'})")
+print("safety oracle: OK for every execution")

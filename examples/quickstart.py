@@ -1,0 +1,36 @@
+"""Quickstart: Matchmaker MultiPaxos in 40 lines.
+
+Builds the paper's deployment (f=1: 2 proposers, 6-acceptor pool, 3
+matchmakers, 3 replicas), serves client commands, performs a live acceptor
+reconfiguration mid-stream, and shows that (a) no command stalled,
+(b) the old configuration was garbage-collected, and (c) the matchmakers
+returned a single configuration (Section 8.1's steady state).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import build
+
+d = build(f=1, n_clients=4, seed=42)
+d.start_clients()
+
+# Let traffic flow, then reconfigure to a random new acceptor set (the
+# paper's Section 4.3: the leader bumps its round and the new configuration
+# is active one round trip later — commands keep flowing meanwhile).
+d.sim.call_at(0.10, d.reconfigure_random)
+d.sim.call_at(0.20, d.reconfigure_random)
+d.sim.run_for(0.4)
+d.stop_clients()
+d.sim.run_for(0.05)
+
+d.check_all()  # safety oracle: one value per slot, replica agreement
+
+lat = d.summary([l * 1e6 for l in d.latencies()])
+print(f"commands chosen:        {len(d.oracle.chosen)}")
+print(f"client latency:         median {lat['median']:.0f}us  iqr {lat['iqr']:.0f}us")
+print(f"reconfigurations:       {len(d.oracle.reconfig_durations)} "
+      f"(active after {max(d.oracle.reconfig_durations)*1e3:.2f} ms worst-case)")
+print(f"stalled commands:       {d.leader.stall_count}  (Optimizations 1+2)")
+print(f"old configs retired:    {len(d.leader.retired_config_ids)} (GC Scenarios 1-3)")
+print(f"configs per matchmaking:{max(d.oracle.matchmaking_history_sizes[1:])} (paper: 1)")
+print("safety:                 OK (oracle checked every slot + replica logs)")

@@ -1,0 +1,37 @@
+"""Batched serving demo: prefill a batch of prompts, decode with greedy
+and temperature sampling, across three architecture families (dense
+sliding-window, SSM, hybrid).
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serve import Engine
+
+for arch in ["gemma2_2b", "mamba2_2p7b", "zamba2_1p2b"]:
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    B, P, G = 4, 12, 16
+    batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab)}
+
+    eng = Engine(cfg, params, max_len=P + G + 1)
+    t0 = time.time()
+    greedy = eng.generate(batch, G)
+    t1 = time.time()
+    sampled = eng.generate(batch, G, temperature=0.8, key=jax.random.PRNGKey(7))
+    print(f"{cfg.arch_id:16s} ({cfg.family:6s}) prefill+decode {G} tokens x{B} reqs "
+          f"in {t1 - t0:.2f}s (incl. compile)")
+    print(f"  greedy : {greedy.tokens[0].tolist()}")
+    print(f"  sampled: {sampled.tokens[0].tolist()}")
+    # greedy decoding is deterministic
+    again = eng.generate(batch, G)
+    assert (again.tokens == greedy.tokens).all()
+print("all engines deterministic under greedy decoding ✓")

@@ -1,0 +1,257 @@
+"""The cluster control plane: Matchmaker MultiPaxos as the membership,
+ordering and durability authority of the training framework.
+
+This is the paper -> framework bridge (DESIGN.md Section 2):
+
+  * The replicated state machine is the **cluster ledger** (LedgerSM): a
+    totally ordered log of ``ReconfigCommand`` / ``StepRecord`` /
+    ``CheckpointCommit`` entries.
+  * A *membership epoch* (which pods participate in training) maps to a
+    consensus **round**: a planned membership change is the stable
+    leader bumping ``s`` (Phase-1 bypass applies -> zero-stall); a
+    coordinator failover bumps ``r``.
+  * The acceptor configuration for epoch ``e`` is hosted *on the pods of
+    epoch e*: reconfiguring the training cluster and reconfiguring the
+    consensus group are the same operation, which is exactly the
+    scenario Matchmaker Paxos was built for (elastic systems,
+    Section 1 of the paper).
+  * A checkpoint is **durable** once its ``CheckpointCommit`` is chosen
+    and the prefix is on f+1 replicas — GC Scenario 3 — after which old
+    pods may be released (the paper's "shut down old configurations").
+
+The protocol runs on the deterministic simulator (core/sim.py) — in a
+real deployment the same state machines run over TCP; nothing in this
+file assumes simulated time.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import messages as m
+from repro.core.acceptor import Acceptor
+from repro.core.deploy import Deployment, build
+from repro.core.oracle import Oracle
+from repro.core.proposer import Options, Proposer
+from repro.core.quorums import Configuration
+from repro.core.replica import Replica, StateMachine
+from repro.core.sim import NetworkConfig, Simulator
+
+
+# --------------------------------------------------------------------------
+# Ledger commands + materialized state
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ReconfigCommand:
+    epoch: int
+    pods: Tuple[str, ...]
+
+    def __repr__(self):
+        return f"Reconfig(e{self.epoch}, {list(self.pods)})"
+
+
+@dataclass(frozen=True)
+class StepRecord:
+    step: int
+    epoch: int
+    metrics_digest: str = ""
+
+
+@dataclass(frozen=True)
+class CheckpointCommit:
+    step: int
+    manifest_digest: str
+
+
+@dataclass(frozen=True)
+class QuorumRecord:
+    """Which pods' gradients were in the quorum for a step range —
+    the data-plane thriftiness certificate."""
+
+    step: int
+    pod_mask: Tuple[int, ...]
+
+
+class LedgerSM(StateMachine):
+    """Materialized view of the cluster ledger."""
+
+    def __init__(self):
+        self.epoch = -1  # no membership committed yet
+        self.pods: Tuple[str, ...] = ()
+        self.last_step = -1
+        self.last_step_epoch = 0
+        self.durable_step = -1
+        self.durable_digest = ""
+        self.history: List[Any] = []
+
+    def apply(self, op: Any) -> Any:
+        self.history.append(op)
+        if isinstance(op, ReconfigCommand):
+            if op.epoch > self.epoch:
+                self.epoch, self.pods = op.epoch, op.pods
+            return ("epoch", self.epoch)
+        if isinstance(op, StepRecord):
+            if op.step > self.last_step:
+                self.last_step, self.last_step_epoch = op.step, op.epoch
+            return ("step", self.last_step)
+        if isinstance(op, CheckpointCommit):
+            if op.step > self.durable_step:
+                self.durable_step = op.step
+                self.durable_digest = op.manifest_digest
+            return ("durable", self.durable_step)
+        if isinstance(op, QuorumRecord):
+            return ("quorum", op.step)
+        return ("ok", None)
+
+
+# --------------------------------------------------------------------------
+# Cluster controller
+# --------------------------------------------------------------------------
+@dataclass
+class PodInfo:
+    name: str
+    acceptor_addrs: Tuple[str, ...]  # acceptors hosted on this pod
+
+
+class ClusterController:
+    """Drives the consensus deployment for the elastic trainer.
+
+    Acceptors are grouped by pod: epoch e's configuration draws its
+    2f+1 acceptors from the pods of epoch e, so membership changes and
+    consensus reconfigurations coincide.
+    """
+
+    def __init__(
+        self,
+        pods: Sequence[str],
+        *,
+        f: int = 1,
+        seed: int = 0,
+        net: Optional[NetworkConfig] = None,
+    ):
+        self.f = f
+        self.dep: Deployment = build(
+            f=f,
+            n_clients=0,
+            seed=seed,
+            net=net,
+            sm_factory=LedgerSM,
+            acceptor_pool=0,
+            auto_elect_leader=False,
+        )
+        self.sim = self.dep.sim
+        self.pods: Dict[str, PodInfo] = {}
+        self._acc_seq = itertools.count()
+        self._cmd_seq = itertools.count(1)
+        self._pending: Dict[Tuple[str, int], Any] = {}
+        self.epoch = 0
+        self.epoch_pods: Tuple[str, ...] = tuple(pods)
+        # Register the initial pods' acceptors and elect the leader on them.
+        for p in pods:
+            self.add_pod(p)
+        cfg = self._config_for(self.epoch_pods)
+        self.dep.proposers[0].become_leader(cfg)
+        self.sim.run_for(0.05)
+        self.commit(ReconfigCommand(epoch=0, pods=self.epoch_pods))
+
+    # -- pod / acceptor management ----------------------------------------
+    def add_pod(self, name: str) -> PodInfo:
+        if name in self.pods:
+            return self.pods[name]
+        addrs = []
+        for _ in range(2 * self.f + 1):
+            a = Acceptor(f"{name}/acc{next(self._acc_seq)}")
+            self.sim.register(a)
+            self.dep.acceptors.append(a)
+            addrs.append(a.addr)
+        info = PodInfo(name=name, acceptor_addrs=tuple(addrs))
+        self.pods[name] = info
+        return info
+
+    def fail_pod(self, name: str) -> None:
+        for a in self.pods[name].acceptor_addrs:
+            self.sim.fail(a)
+
+    def _config_for(self, pods: Sequence[str]) -> Configuration:
+        """2f+1 acceptors spread across the pod set (one per pod, wrapping)."""
+        addrs = []
+        pod_list = [self.pods[p] for p in pods]
+        i = 0
+        while len(addrs) < 2 * self.f + 1:
+            pod = pod_list[i % len(pod_list)]
+            idx = i // len(pod_list)
+            addrs.append(pod.acceptor_addrs[idx % len(pod.acceptor_addrs)])
+            i += 1
+        return self.dep.fresh_config(addrs)
+
+    # -- ledger operations --------------------------------------------------
+    def commit(self, op: Any, timeout: float = 1.0) -> int:
+        """Propose ``op`` and run the sim until it is chosen; returns slot."""
+        leader = self.dep.leader
+        cmd = m.Command(cmd_id=("ctrl", next(self._cmd_seq)), op=op)
+        before = set(leader.chosen_values)
+        leader.on_message("ctrl", m.ClientRequest(command=cmd))
+        deadline = self.sim.now + timeout
+        while self.sim.now < deadline:
+            self.sim.run_for(0.001)
+            for slot, v in leader.chosen_values.items():
+                if slot not in before and isinstance(v, m.Command) and v.cmd_id == cmd.cmd_id:
+                    return slot
+        raise TimeoutError(f"ledger commit of {op!r} timed out")
+
+    def reconfigure(self, new_pods: Sequence[str]) -> Dict[str, float]:
+        """Membership change: one Matchmaker reconfiguration + one ledger
+        entry.  Returns timing telemetry (the paper's 'few ms' claim)."""
+        for p in new_pods:
+            self.add_pod(p)
+        t0 = self.sim.now
+        leader = self.dep.leader
+        n_reconfigs_before = len(self.dep.oracle.reconfig_durations)
+        leader.reconfigure(self._config_for(new_pods))
+        # The new configuration is active right after the Matchmaking
+        # phase (Optimization 2 keeps commands flowing meanwhile).
+        deadline = self.sim.now + 1.0
+        while (
+            len(self.dep.oracle.reconfig_durations) == n_reconfigs_before
+            and self.sim.now < deadline
+        ):
+            self.sim.run_for(0.001)
+        t_active = self.sim.now
+        self.epoch += 1
+        self.epoch_pods = tuple(new_pods)
+        self.commit(ReconfigCommand(epoch=self.epoch, pods=self.epoch_pods))
+        return {
+            "reconfig_started": t0,
+            "config_active": t_active,
+            "activation_ms": (t_active - t0) * 1e3,
+        }
+
+    def commit_step(self, step: int, digest: str = "") -> None:
+        self.commit(StepRecord(step=step, epoch=self.epoch, metrics_digest=digest))
+
+    def commit_checkpoint(self, step: int, manifest_digest: str) -> None:
+        """GC Scenario 3: once chosen + replicated, pre-checkpoint ledger
+        state is collectable and pre-epoch pods releasable."""
+        self.commit(CheckpointCommit(step=step, manifest_digest=manifest_digest))
+
+    def commit_quorum(self, step: int, pod_mask: Sequence[int]) -> None:
+        self.commit(QuorumRecord(step=step, pod_mask=tuple(pod_mask)))
+
+    # -- views ---------------------------------------------------------------
+    def ledger(self) -> LedgerSM:
+        return self.dep.replicas[0].sm  # type: ignore[return-value]
+
+    def membership(self) -> Tuple[int, Tuple[str, ...]]:
+        sm = self.ledger()
+        return sm.epoch, sm.pods
+
+    def durable_step(self) -> int:
+        return self.ledger().durable_step
+
+    def check_safety(self) -> None:
+        self.dep.check_all()
+
+    def retired_config_count(self) -> int:
+        return len(self.dep.leader.retired_config_ids)

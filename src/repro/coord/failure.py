@@ -1,0 +1,82 @@
+"""Heartbeat failure detection feeding reconfiguration proposals.
+
+Pods answer Ping with Pong (the acceptor role already does); the detector
+tracks last-response times and reports pods that exceeded the suspicion
+timeout.  The elastic trainer turns suspicions into
+``ClusterController.reconfigure`` calls — the paper's "replace failed
+acceptors" flow (Section 8.1: fail at 25s, reconfigure at 30s), minus
+the artificial 5s delay.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core import messages as m
+from repro.core.sim import Address, Node
+
+
+class FailureDetector(Node):
+    def __init__(
+        self,
+        addr: Address,
+        targets: Dict[str, Tuple[Address, ...]],  # pod -> probe addresses
+        *,
+        ping_interval: float = 0.05,
+        suspect_after: float = 0.2,
+        on_suspect: Optional[Callable[[str], None]] = None,
+    ):
+        super().__init__(addr)
+        self.targets = {p: tuple(a) for p, a in targets.items()}
+        self.ping_interval = ping_interval
+        self.suspect_after = suspect_after
+        self.on_suspect = on_suspect
+        self.last_seen: Dict[str, float] = {}
+        self.suspected: Set[str] = set()
+        self._nonce = 0
+        self._addr_to_pod: Dict[Address, str] = {}
+        for pod, addrs in self.targets.items():
+            for a in addrs:
+                self._addr_to_pod[a] = pod
+
+    def on_start(self) -> None:
+        for pod in self.targets:
+            self.last_seen[pod] = 0.0
+        self._tick()
+
+    def watch(self, pod: str, addrs: Tuple[Address, ...]) -> None:
+        self.targets[pod] = tuple(addrs)
+        for a in addrs:
+            self._addr_to_pod[a] = pod
+        self.last_seen[pod] = self.now
+        self.suspected.discard(pod)
+
+    def unwatch(self, pod: str) -> None:
+        self.targets.pop(pod, None)
+        self.last_seen.pop(pod, None)
+        self.suspected.discard(pod)
+
+    def _tick(self) -> None:
+        self._nonce += 1
+        for pod, addrs in self.targets.items():
+            for a in addrs:
+                self.send(a, m.Ping(self._nonce))
+        for pod, seen in list(self.last_seen.items()):
+            if (
+                pod in self.targets
+                and self.now - seen > self.suspect_after
+                and pod not in self.suspected
+            ):
+                self.suspected.add(pod)
+                if self.on_suspect is not None:
+                    self.on_suspect(pod)
+        self.set_timer(self.ping_interval, self._tick)
+
+    def on_message(self, src: Address, msg: Any) -> None:
+        if isinstance(msg, m.Pong):
+            pod = self._addr_to_pod.get(src)
+            if pod is not None:
+                self.last_seen[pod] = self.now
+                if pod in self.suspected:
+                    self.suspected.discard(pod)  # recovered

@@ -1,0 +1,82 @@
+"""Closed-loop workload clients (Section 8 methodology).
+
+Every client repeatedly proposes a state machine command, waits for the
+response, and immediately proposes another.  Latency samples are recorded
+with their (virtual) timestamps so benchmarks can compute the paper's
+sliding-window medians / IQRs / standard deviations.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from . import messages as m
+from .sim import Address, Node
+
+
+class Client(Node):
+    def __init__(
+        self,
+        addr: Address,
+        leader_provider,
+        *,
+        op_factory=lambda n: b"\x00",  # the paper's one-byte no-op payload
+        retry_timeout: float = 0.5,
+        think_time: float = 0.0,
+    ):
+        super().__init__(addr)
+        self.leader_provider = leader_provider  # () -> leader address
+        self.op_factory = op_factory
+        self.retry_timeout = retry_timeout
+        self.think_time = think_time
+        self.seq = 0
+        self.inflight: Optional[m.Command] = None
+        self.sent_at = 0.0
+        self.running = False
+        self._retry_timer = None
+        # telemetry
+        self.latencies: List[Tuple[float, float]] = []  # (completion time, latency)
+        self.replies_by_cmd: Dict[Tuple[str, int], List[m.ClientReply]] = {}
+
+    def start(self) -> None:
+        self.running = True
+        self._propose_next()
+
+    def stop(self) -> None:
+        self.running = False
+        if self._retry_timer is not None:
+            self._retry_timer.cancel()
+
+    def _propose_next(self) -> None:
+        if not self.running or self.failed:
+            return
+        self.seq += 1
+        cmd = m.Command(cmd_id=(self.addr, self.seq), op=self.op_factory(self.seq))
+        self.inflight = cmd
+        self.sent_at = self.now
+        self._send_current()
+
+    def _send_current(self) -> None:
+        if self.inflight is None:
+            return
+        leader = self.leader_provider()
+        if leader is not None:
+            self.send(leader, m.ClientRequest(command=self.inflight))
+        if self._retry_timer is not None:
+            self._retry_timer.cancel()
+        self._retry_timer = self.set_timer(self.retry_timeout, self._send_current)
+
+    def on_message(self, src: Address, msg: Any) -> None:
+        if isinstance(msg, m.ClientReply):
+            self.replies_by_cmd.setdefault(msg.cmd_id, []).append(msg)
+            if self.inflight is not None and msg.cmd_id == self.inflight.cmd_id:
+                self.latencies.append((self.now, self.now - self.sent_at))
+                self.inflight = None
+                if self._retry_timer is not None:
+                    self._retry_timer.cancel()
+                if self.think_time > 0:
+                    self.set_timer(self.think_time, self._propose_next)
+                else:
+                    self._propose_next()
+        elif isinstance(msg, m.LeaderHint):
+            self._send_current()

@@ -1,0 +1,208 @@
+"""Deployment harness: wire a full Matchmaker MultiPaxos system together.
+
+Reproduces the paper's Section 8 topology: for a given ``f``, ``f+1``
+proposers, a pool of ``2 x (2f+1)`` acceptors (reconfigurations draw random
+``2f+1``-subsets from the pool), ``2f+1`` matchmakers (plus a standby pool
+of ``2f+1`` more for matchmaker reconfigurations), and ``2f+1`` replicas.
+
+Also computes the paper's reporting statistics: sliding-window median /
+IQR / stdev over latency and throughput samples (Tables 1 and 2).
+"""
+
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from . import messages as m
+from .acceptor import Acceptor
+from .client import Client
+from .matchmaker import Matchmaker
+from .mm_reconfig import MMReconfigCoordinator
+from .oracle import Oracle
+from .proposer import Options, Proposer
+from .quorums import Configuration
+from .replica import NoopSM, Replica, StateMachine
+from .sim import NetworkConfig, Simulator
+
+
+@dataclass
+class Deployment:
+    sim: Simulator
+    oracle: Oracle
+    f: int
+    proposers: List[Proposer]
+    acceptors: List[Acceptor]
+    matchmakers: List[Matchmaker]
+    standby_matchmakers: List[Matchmaker]
+    replicas: List[Replica]
+    clients: List[Client]
+    mm_coordinator: MMReconfigCoordinator
+    config_seq: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def leader(self) -> Proposer:
+        for p in self.proposers:
+            if p.is_leader:
+                return p
+        return self.proposers[0]
+
+    def fresh_config(self, acceptor_addrs: Sequence[str]) -> Configuration:
+        self.config_seq += 1
+        return Configuration.majority(self.config_seq, acceptor_addrs)
+
+    def random_config(self) -> Configuration:
+        """A random 2f+1-subset of the acceptor pool (Section 8.1)."""
+        n = 2 * self.f + 1
+        addrs = self.sim.rng.sample([a.addr for a in self.acceptors], n)
+        return self.fresh_config(sorted(addrs))
+
+    def reconfigure_random(self) -> None:
+        leader = self.leader
+        if not leader.is_leader or leader.round is None:
+            return  # no stable leader yet (e.g. initial WAN Phase 1 pending)
+        leader.reconfigure(self.random_config())
+
+    def reconfigure_matchmakers(self, new_addrs: Sequence[str]) -> None:
+        if self.mm_coordinator.phase != "idle":
+            return  # one at a time; benchmark schedules may overlap
+        old = tuple(self.leader.matchmakers)
+        if tuple(sorted(old)) == tuple(sorted(new_addrs)):
+            return
+        self.mm_coordinator.reconfigure(old, tuple(new_addrs))
+
+    def start_clients(self) -> None:
+        for c in self.clients:
+            c.start()
+
+    def stop_clients(self) -> None:
+        for c in self.clients:
+            c.stop()
+
+    # -- Section 8 statistics -------------------------------------------
+    def latencies(self, t0: float = 0.0, t1: float = float("inf")) -> List[float]:
+        return [
+            lat
+            for c in self.clients
+            for (t, lat) in c.latencies
+            if t0 <= t < t1
+        ]
+
+    def throughput_samples(
+        self, t0: float, t1: float, window: float = 1.0, stride: float = 0.1
+    ) -> List[float]:
+        """Sliding-window commands/sec, like the paper's Figure 9."""
+        times = sorted(t for c in self.clients for (t, _) in c.latencies)
+        samples = []
+        t = t0 + window
+        while t <= t1:
+            lo, hi = t - window, t
+            n = sum(1 for x in times if lo <= x < hi)
+            samples.append(n / window)
+            t += stride
+        return samples
+
+    @staticmethod
+    def summary(xs: Sequence[float]) -> Dict[str, float]:
+        if not xs:
+            return {"median": 0.0, "iqr": 0.0, "stdev": 0.0, "n": 0}
+        xs = sorted(xs)
+        q = statistics.quantiles(xs, n=4) if len(xs) >= 4 else [xs[0], xs[len(xs) // 2], xs[-1]]
+        return {
+            "median": statistics.median(xs),
+            "iqr": q[2] - q[0],
+            "stdev": statistics.pstdev(xs) if len(xs) > 1 else 0.0,
+            "n": len(xs),
+        }
+
+    def check_all(self) -> None:
+        self.oracle.assert_safe()
+        self.oracle.check_replicas(self.replicas)
+        self.oracle.check_client_results(self.clients)
+
+
+def build(
+    *,
+    f: int = 1,
+    n_clients: int = 1,
+    seed: int = 0,
+    options: Optional[Options] = None,
+    net: Optional[NetworkConfig] = None,
+    sm_factory: Callable[[], StateMachine] = NoopSM,
+    acceptor_pool: Optional[int] = None,
+    client_think_time: float = 0.0,
+    auto_elect_leader: bool = True,
+) -> Deployment:
+    """Build the paper's deployment and elect proposer 0 the leader."""
+    sim = Simulator(seed=seed, net=net)
+    oracle = Oracle()
+    n_acc_pool = acceptor_pool if acceptor_pool is not None else 2 * (2 * f + 1)
+
+    mm_addrs = tuple(f"mm{i}" for i in range(2 * f + 1))
+    standby_addrs = tuple(f"mm{i}" for i in range(2 * f + 1, 2 * (2 * f + 1)))
+    acc_addrs = tuple(f"a{i}" for i in range(n_acc_pool))
+    rep_addrs = tuple(f"r{i}" for i in range(2 * f + 1))
+    prop_addrs = tuple(f"p{i}" for i in range(f + 1))
+
+    matchmakers = [Matchmaker(a) for a in mm_addrs]
+    standby = [Matchmaker(a, enabled=False) for a in standby_addrs]
+    acceptors = [Acceptor(a) for a in acc_addrs]
+    replicas = [Replica(a, sm_factory, leader_addrs=prop_addrs) for a in rep_addrs]
+    proposers = [
+        Proposer(
+            prop_addrs[i],
+            i,
+            matchmakers=mm_addrs,
+            replicas=rep_addrs,
+            proposers=prop_addrs,
+            oracle=oracle,
+            options=options,
+            f=f,
+        )
+        for i in range(f + 1)
+    ]
+
+    def on_mm_complete(new_set: Tuple[str, ...]) -> None:
+        for p in proposers:
+            p.set_matchmakers(new_set)
+
+    mm_coord = MMReconfigCoordinator(
+        "mmcoord", 99, f=f, on_complete=on_mm_complete
+    )
+
+    def current_leader() -> Optional[str]:
+        for p in proposers:
+            if p.is_leader:
+                return p.addr
+        # Fall back to whoever the proposers believe leads.
+        for p in proposers:
+            if p.leader_addr:
+                return p.leader_addr
+        return prop_addrs[0]
+
+    clients = [
+        Client(f"c{i}", current_leader, think_time=client_think_time)
+        for i in range(n_clients)
+    ]
+
+    for node in [*matchmakers, *standby, *acceptors, *replicas, *proposers, mm_coord, *clients]:
+        sim.register(node)
+
+    dep = Deployment(
+        sim=sim,
+        oracle=oracle,
+        f=f,
+        proposers=proposers,
+        acceptors=acceptors,
+        matchmakers=matchmakers,
+        standby_matchmakers=standby,
+        replicas=replicas,
+        clients=clients,
+        mm_coordinator=mm_coord,
+    )
+    if auto_elect_leader:
+        proposers[0].become_leader(dep.fresh_config([a.addr for a in acceptors[: 2 * f + 1]]))
+        sim.run_for(0.01)  # let matchmaking + phase 1 settle
+    return dep

@@ -1,0 +1,145 @@
+"""The matchmaker role (Algorithms 1 and 4, plus the Section 6 extensions).
+
+A matchmaker maintains a log ``L`` of configurations indexed by round and a
+garbage-collection watermark ``w``.  On ``MatchA(i, C_i)`` it returns the
+history ``H_i`` of configurations in rounds less than ``i`` — unless it has
+already promised a round >= i, in which case it nacks (the paper "ignores";
+the nack is the liveness detail of Section 3.2's closing remark).
+
+For matchmaker reconfiguration (Section 6) every matchmaker additionally:
+  * answers ``StopA`` by freezing and returning its ``(L, w)``,
+  * doubles as a single-decree Paxos *acceptor* used to choose the next
+    matchmaker set, and
+  * can be bootstrapped from a merged ``(L, w)`` and later enabled once its
+    cohort has been chosen.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from . import messages as m
+from .quorums import Configuration
+from .rounds import NEG_INF, Round, max_round
+from .sim import Address, Node
+
+
+class Matchmaker(Node):
+    def __init__(self, addr: Address, *, enabled: bool = True):
+        super().__init__(addr)
+        self.log: Dict[Round, Configuration] = {}
+        self.gc_watermark: Any = NEG_INF  # rounds < w are garbage collected
+        self.stopped = False
+        # A bootstrapped matchmaker may not process until its set is chosen.
+        self.enabled = enabled
+        self.bootstrapped = enabled
+        # Section 6: single-decree Paxos acceptor state for choosing M_new.
+        self.mm_ballot: Any = NEG_INF
+        self.mm_vb: Any = NEG_INF
+        self.mm_vv: Any = None
+        # telemetry
+        self.match_count = 0
+        self.history_sizes = []
+
+    # -- helpers -----------------------------------------------------------
+    def _history_before(self, rnd: Round) -> Tuple[Tuple[Round, Configuration], ...]:
+        items = [(j, c) for j, c in self.log.items() if j < rnd]
+        items.sort(key=lambda jc: jc[0].key())
+        return tuple(items)
+
+    def snapshot(self) -> Tuple[Tuple[Round, Configuration], ...]:
+        items = sorted(self.log.items(), key=lambda jc: jc[0].key())
+        return tuple(items)
+
+    # -- message handling ----------------------------------------------------
+    def on_message(self, src: Address, msg: Any) -> None:
+        if isinstance(msg, m.StopA):
+            # Section 6: freeze.  StopA is answered even when already stopped
+            # (idempotent) so that f+1 StopB responses can always be gathered.
+            self.stopped = True
+            self.send(src, m.StopB(log=self.snapshot(), gc_watermark=self.gc_watermark))
+            return
+        if isinstance(msg, (m.MMP1A, m.MMP2A)):
+            # The matchmaker-set Paxos instance keeps running even when the
+            # matchmaker is stopped: choosing M_new is exactly what a stopped
+            # cohort is for.
+            self._on_mm_paxos(src, msg)
+            return
+        if isinstance(msg, m.Bootstrap):
+            self._on_bootstrap(src, msg)
+            return
+        if isinstance(msg, m.MMEnable):
+            # Only meaningful after Bootstrap; the coordinator sends MMEnable
+            # causally after our BootstrapAck, but the network may duplicate.
+            if self.bootstrapped:
+                self.enabled = True
+            return
+        if self.stopped or not self.enabled:
+            return
+        if isinstance(msg, m.MatchA):
+            self._on_match_a(src, msg)
+        elif isinstance(msg, m.GarbageA):
+            self._on_garbage_a(src, msg)
+
+    # -- Algorithm 4 ---------------------------------------------------------
+    def _on_match_a(self, src: Address, msg: m.MatchA) -> None:
+        i, ci = msg.round, msg.config
+        if i < self.gc_watermark:
+            self.send(src, m.MatchNack(round=i, witnessed=self.gc_watermark))
+            return
+        # Idempotent retransmission: same round, same configuration.
+        if i in self.log and self.log[i].config_id == ci.config_id:
+            self.send(
+                src,
+                m.MatchB(
+                    round=i,
+                    gc_watermark=self.gc_watermark,
+                    history=self._history_before(i),
+                ),
+            )
+            return
+        witnessed = [j for j in self.log if j >= i]
+        if witnessed:
+            self.send(src, m.MatchNack(round=i, witnessed=max(witnessed, key=lambda r: r.key())))
+            return
+        hist = self._history_before(i)
+        self.log[i] = ci
+        self.match_count += 1
+        self.history_sizes.append(len(hist))
+        self.send(src, m.MatchB(round=i, gc_watermark=self.gc_watermark, history=hist))
+
+    def _on_garbage_a(self, src: Address, msg: m.GarbageA) -> None:
+        i = msg.round
+        for j in [j for j in self.log if j < i]:
+            del self.log[j]
+        self.gc_watermark = max_round(self.gc_watermark, i)
+        self.send(src, m.GarbageB(round=i))
+
+    # -- Section 6: bootstrap ------------------------------------------------
+    def _on_bootstrap(self, src: Address, msg: m.Bootstrap) -> None:
+        if not self.bootstrapped or self.stopped:
+            # Fresh node, or a previously-stopped matchmaker being recycled
+            # into a new cohort: adopt the merged state wholesale.
+            self.log = {j: c for j, c in msg.log}
+            self.gc_watermark = msg.gc_watermark
+            self.bootstrapped = True
+            self.stopped = False
+            self.enabled = False  # awaits MMEnable (set is chosen first)
+        self.send(src, m.BootstrapAck())
+
+    # -- Section 6: Paxos acceptor for the next matchmaker set ---------------
+    def _on_mm_paxos(self, src: Address, msg: Any) -> None:
+        if isinstance(msg, m.MMP1A):
+            if msg.ballot > self.mm_ballot:
+                self.mm_ballot = msg.ballot
+                self.send(src, m.MMP1B(ballot=msg.ballot, vb=self.mm_vb, vv=self.mm_vv))
+            else:
+                self.send(src, m.MMNack(ballot=self.mm_ballot))
+        elif isinstance(msg, m.MMP2A):
+            if msg.ballot >= self.mm_ballot:
+                self.mm_ballot = msg.ballot
+                self.mm_vb = msg.ballot
+                self.mm_vv = msg.value
+                self.send(src, m.MMP2B(ballot=msg.ballot))
+            else:
+                self.send(src, m.MMNack(ballot=self.mm_ballot))

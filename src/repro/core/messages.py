@@ -1,0 +1,290 @@
+"""Every protocol message, as an immutable dataclass.
+
+Naming follows the paper: MatchA/MatchB (Matchmaking phase), Phase1A/Phase1B,
+Phase2A/Phase2B, GarbageA/GarbageB (Section 5), StopA/StopB + Bootstrap
+(matchmaker reconfiguration, Section 6).  Nacks are the "straightforward
+details" the paper elides; they are required for liveness under our
+simulated message drops and round races.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, FrozenSet, Mapping, Optional, Tuple
+
+from .quorums import Configuration
+from .rounds import Round
+
+Address = str
+Slot = int
+
+
+# --------------------------------------------------------------------------
+# Values (state machine commands)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Command:
+    """A client command.  ``cmd_id`` provides at-most-once semantics."""
+
+    cmd_id: Tuple[str, int]  # (client address, client sequence number)
+    op: Any
+
+    def __repr__(self) -> str:
+        return f"Cmd({self.cmd_id[0]}#{self.cmd_id[1]})"
+
+
+@dataclass(frozen=True)
+class Noop:
+    """The paper's no-op filler for log holes."""
+
+    def __repr__(self) -> str:
+        return "Noop"
+
+
+NOOP = Noop()
+ANY_VALUE = Command(("<any>", -1), None)  # Fast Paxos "any" (Algorithm 5)
+
+
+# --------------------------------------------------------------------------
+# Client <-> proposer / replica
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ClientRequest:
+    command: Command
+
+
+@dataclass(frozen=True)
+class ClientReply:
+    cmd_id: Tuple[str, int]
+    result: Any
+    slot: Optional[Slot] = None
+
+
+@dataclass(frozen=True)
+class LeaderHint:
+    """Redirect a client to the current leader."""
+
+    leader: Address
+
+
+# --------------------------------------------------------------------------
+# Matchmaking phase (Algorithms 1 and 4)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MatchA:
+    round: Round
+    config: Configuration
+
+
+@dataclass(frozen=True)
+class MatchB:
+    round: Round
+    gc_watermark: Any  # Round | NEG_INF — rounds < w are garbage collected
+    history: Tuple[Tuple[Round, Configuration], ...]  # H_i = {(j, C_j) | j < i}
+
+
+@dataclass(frozen=True)
+class MatchNack:
+    round: Round  # the offending round
+    witnessed: Any  # a round >= ours that the matchmaker has seen
+
+
+# --------------------------------------------------------------------------
+# Phase 1 / Phase 2 (Algorithms 2 and 3, MultiPaxos-extended)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Phase1A:
+    round: Round
+    from_slot: Slot = 0  # MultiPaxos: only report votes at slots >= from_slot
+
+
+@dataclass(frozen=True)
+class PhaseVote:
+    slot: Slot
+    vr: Any  # Round | NEG_INF
+    vv: Any  # Command | Noop
+
+
+@dataclass(frozen=True)
+class Phase1B:
+    round: Round
+    votes: Tuple[PhaseVote, ...]
+    # Scenario 3 (Section 5.2): this acceptor knows slots < chosen_watermark
+    # are chosen and stored on f+1 replicas.
+    chosen_watermark: Slot = 0
+
+
+@dataclass(frozen=True)
+class Phase1Nack:
+    round: Round
+    witnessed: Any
+
+
+@dataclass(frozen=True)
+class Phase2A:
+    round: Round
+    slot: Slot
+    value: Any
+
+
+@dataclass(frozen=True)
+class Phase2B:
+    round: Round
+    slot: Slot
+
+
+@dataclass(frozen=True)
+class Phase2Nack:
+    round: Round
+    slot: Slot
+    witnessed: Any
+
+
+# --------------------------------------------------------------------------
+# Chosen / replication
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Chosen:
+    slot: Slot
+    value: Any
+
+
+@dataclass(frozen=True)
+class ReplicaAck:
+    """Replica r has persisted all slots < watermark."""
+
+    watermark: Slot
+
+
+@dataclass(frozen=True)
+class StoredWatermark:
+    """Leader -> Phase 2 quorum of C_i: slots < watermark are chosen and
+    stored on f+1 replicas (precondition for GC Scenario 3)."""
+
+    round: Round
+    watermark: Slot
+
+
+@dataclass(frozen=True)
+class StoredWatermarkAck:
+    round: Round
+    watermark: Slot
+
+
+@dataclass(frozen=True)
+class RecoverA:
+    """New leader asks replicas for their chosen prefix."""
+
+
+@dataclass(frozen=True)
+class RecoverB:
+    watermark: Slot
+    entries: Tuple[Tuple[Slot, Any], ...]  # chosen log entries
+
+
+# --------------------------------------------------------------------------
+# Garbage collection (Section 5, Algorithm 4)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class GarbageA:
+    round: Round  # garbage collect all configurations in rounds < round
+
+
+@dataclass(frozen=True)
+class GarbageB:
+    round: Round
+
+
+# --------------------------------------------------------------------------
+# Matchmaker reconfiguration (Section 6)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StopA:
+    pass
+
+
+@dataclass(frozen=True)
+class StopB:
+    log: Tuple[Tuple[Round, Configuration], ...]
+    gc_watermark: Any
+
+
+@dataclass(frozen=True)
+class Bootstrap:
+    log: Tuple[Tuple[Round, Configuration], ...]
+    gc_watermark: Any
+
+
+@dataclass(frozen=True)
+class BootstrapAck:
+    pass
+
+
+@dataclass(frozen=True)
+class MMEnable:
+    """Sent once the new matchmaker set is *chosen*; enables processing."""
+
+
+# Single-decree Paxos among the old matchmakers to choose the new set
+# (Section 6: "every matchmaker in M_old doubles as a Paxos acceptor").
+@dataclass(frozen=True)
+class MMP1A:
+    ballot: Round
+
+
+@dataclass(frozen=True)
+class MMP1B:
+    ballot: Round
+    vb: Any  # Round | NEG_INF
+    vv: Any  # the matchmaker set voted for
+
+
+@dataclass(frozen=True)
+class MMP2A:
+    ballot: Round
+    value: Tuple[Address, ...]  # M_new
+
+
+@dataclass(frozen=True)
+class MMP2B:
+    ballot: Round
+
+
+@dataclass(frozen=True)
+class MMNack:
+    ballot: Round
+
+
+# --------------------------------------------------------------------------
+# Leader election / failure detection
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Heartbeat:
+    round: Round
+
+
+@dataclass(frozen=True)
+class Ping:
+    nonce: int
+
+
+@dataclass(frozen=True)
+class Pong:
+    nonce: int
+
+
+# --------------------------------------------------------------------------
+# Fast Paxos (Section 7, Algorithm 5)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FastP2A:
+    """A fast-round proposal sent by *clients* directly to acceptors."""
+
+    round: Round
+    value: Any
+
+
+@dataclass(frozen=True)
+class FastP2B:
+    round: Round
+    value: Any

@@ -1,0 +1,196 @@
+"""Matchmaker reconfiguration (Section 6).
+
+The coordinator replaces the matchmaker set ``M_old`` with ``M_new``:
+
+  1. ``StopA`` -> every matchmaker in ``M_old``; await f+1 ``StopB(L_i, w_i)``.
+  2. Merge: ``w = max w_i``; ``L = union L_i`` minus entries in rounds < w
+     (Figure 7).
+  3. Choose ``M_new`` via single-decree Paxos *among the old matchmakers*
+     (they double as Paxos acceptors) so two concurrent reconfigurations
+     cannot install disjoint sets.
+  4. ``Bootstrap(L, w)`` -> every matchmaker in ``M_new``; await f+1 acks.
+  5. ``MMEnable`` -> ``M_new``; announce the new set to the proposers.
+
+Because matchmakers are contacted only on round changes, all of this is off
+the critical path of command processing (Figure 21's claim).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from . import messages as m
+from .quorums import Configuration
+from .rounds import NEG_INF, Round, max_round
+from .sim import Address, Node
+
+
+@dataclass
+class MMReconfigStats:
+    started: float = 0.0
+    stopped_at: float = 0.0        # f+1 StopBs gathered
+    chosen_at: float = 0.0         # M_new chosen by Paxos
+    enabled_at: float = 0.0        # M_new bootstrapped + enabled
+
+
+class MMReconfigCoordinator(Node):
+    """Drives one matchmaker reconfiguration at a time.
+
+    ``on_complete(new_set)`` is invoked (in simulation time) once ``M_new``
+    is live; the caller is responsible for pointing proposers at the new
+    set (``Proposer.set_matchmakers``).
+    """
+
+    def __init__(
+        self,
+        addr: Address,
+        coordinator_id: int,
+        *,
+        f: int = 1,
+        on_complete: Optional[Callable[[Tuple[Address, ...]], None]] = None,
+        retry_timeout: float = 0.25,
+    ):
+        super().__init__(addr)
+        self.cid = coordinator_id
+        self.f = f
+        self.on_complete = on_complete
+        self.retry_timeout = retry_timeout
+
+        self.m_old: Tuple[Address, ...] = ()
+        self.m_new: Tuple[Address, ...] = ()
+        self.phase = "idle"
+        self.ballot: Optional[Round] = None
+        self.max_witnessed: Any = NEG_INF
+
+        self._stop_acks: Dict[Address, m.StopB] = {}
+        self._p1_acks: Dict[Address, m.MMP1B] = {}
+        self._p2_acks: Set[Address] = set()
+        self._boot_acks: Set[Address] = set()
+        self._merged_log: Tuple[Tuple[Round, Configuration], ...] = ()
+        self._merged_w: Any = NEG_INF
+        self.stats = MMReconfigStats()
+
+    # ------------------------------------------------------------------
+    def reconfigure(self, m_old: Tuple[Address, ...], m_new: Tuple[Address, ...]) -> None:
+        assert self.phase == "idle", "one reconfiguration at a time"
+        self.m_old = tuple(m_old)
+        self.m_new = tuple(m_new)
+        self.phase = "stopping"
+        self.stats = MMReconfigStats(started=self.now)
+        self._stop_acks = {}
+        self.broadcast(self.m_old, m.StopA())
+        self._arm_retry("stopping", lambda: self.broadcast(self.m_old, m.StopA()))
+
+    def _arm_retry(self, phase: str, resend: Callable[[], None]) -> None:
+        def fire() -> None:
+            if self.phase == phase:
+                resend()
+                self._arm_retry(phase, resend)
+
+        self.set_timer(self.retry_timeout, fire)
+
+    # ------------------------------------------------------------------
+    def on_message(self, src: Address, msg: Any) -> None:
+        if isinstance(msg, m.StopB):
+            self._on_stop_b(src, msg)
+        elif isinstance(msg, m.MMP1B):
+            self._on_mm_p1b(src, msg)
+        elif isinstance(msg, m.MMP2B):
+            self._on_mm_p2b(src, msg)
+        elif isinstance(msg, m.MMNack):
+            self.max_witnessed = max_round(self.max_witnessed, msg.ballot)
+        elif isinstance(msg, m.BootstrapAck):
+            self._on_bootstrap_ack(src)
+
+    # -- step 1/2: stop + merge -----------------------------------------
+    def _on_stop_b(self, src: Address, msg: m.StopB) -> None:
+        if self.phase != "stopping":
+            return
+        self._stop_acks[src] = msg
+        if len(self._stop_acks) < self.f + 1:
+            return
+        self.stats.stopped_at = self.now
+        # Figure 7: merge logs, take the max watermark, drop entries < w.
+        merged: Dict[Round, Configuration] = {}
+        w: Any = NEG_INF
+        for b in self._stop_acks.values():
+            w = max_round(w, b.gc_watermark)
+            for j, c in b.log:
+                merged[j] = c
+        entries = tuple(
+            sorted(
+                ((j, c) for j, c in merged.items() if not (j < w)),
+                key=lambda jc: jc[0].key(),
+            )
+        )
+        self._merged_log = entries
+        self._merged_w = w
+        # -- step 3: choose M_new among the old matchmakers --------------
+        self.phase = "choosing"
+        base = self.max_witnessed
+        self.ballot = (
+            Round(0, self.cid, 0) if base == NEG_INF else base.next_r(self.cid)
+        )
+        self._p1_acks = {}
+        self._p2_acks = set()
+        self.broadcast(self.m_old, m.MMP1A(ballot=self.ballot))
+        self._arm_retry("choosing", self._restart_choice)
+
+    def _restart_choice(self) -> None:
+        base = max_round(self.max_witnessed, self.ballot)
+        self.ballot = base.next_r(self.cid)
+        self._p1_acks = {}
+        self._p2_acks = set()
+        self.broadcast(self.m_old, m.MMP1A(ballot=self.ballot))
+
+    def _on_mm_p1b(self, src: Address, msg: m.MMP1B) -> None:
+        if self.phase != "choosing" or msg.ballot != self.ballot:
+            return
+        self._p1_acks[src] = msg
+        if len(self._p1_acks) < self.f + 1:
+            return
+        # Standard Paxos value selection: adopt the highest-ballot vote.
+        best_vb: Any = NEG_INF
+        value: Any = self.m_new
+        for b in self._p1_acks.values():
+            if b.vb != NEG_INF and best_vb < b.vb:
+                best_vb, value = b.vb, b.vv
+        self._chosen_candidate = tuple(value)
+        self.phase = "proposing"
+        self.broadcast(self.m_old, m.MMP2A(ballot=self.ballot, value=self._chosen_candidate))
+        self._arm_retry(
+            "proposing",
+            lambda: self.broadcast(
+                self.m_old, m.MMP2A(ballot=self.ballot, value=self._chosen_candidate)
+            ),
+        )
+
+    def _on_mm_p2b(self, src: Address, msg: m.MMP2B) -> None:
+        if self.phase != "proposing" or msg.ballot != self.ballot:
+            return
+        self._p2_acks.add(src)
+        if len(self._p2_acks) < self.f + 1:
+            return
+        # M_new chosen.  If another coordinator won, adopt its set.
+        self.m_new = self._chosen_candidate
+        self.stats.chosen_at = self.now
+        # -- step 4: bootstrap the new matchmakers ------------------------
+        self.phase = "bootstrapping"
+        self._boot_acks = set()
+        boot = m.Bootstrap(log=self._merged_log, gc_watermark=self._merged_w)
+        self.broadcast(self.m_new, boot)
+        self._arm_retry("bootstrapping", lambda: self.broadcast(self.m_new, boot))
+
+    # -- step 5: enable ---------------------------------------------------
+    def _on_bootstrap_ack(self, src: Address) -> None:
+        if self.phase != "bootstrapping":
+            return
+        self._boot_acks.add(src)
+        if len(self._boot_acks) < self.f + 1:
+            return
+        self.phase = "idle"
+        self.stats.enabled_at = self.now
+        self.broadcast(self.m_new, m.MMEnable())
+        if self.on_complete is not None:
+            self.on_complete(self.m_new)

@@ -1,0 +1,108 @@
+"""State machine replicas (Section 4.1 / 5.3).
+
+Replicas insert chosen commands into their logs, execute them in prefix
+order, and reply to clients.  For garbage collection Scenario 3, the paper
+deploys ``2f+1`` replicas and requires the chosen prefix to be stored on at
+least ``f+1`` of them before old configurations are retired — replicas
+therefore ack their persisted watermark back to the leader.
+
+The state machine is pluggable; the paper's evaluation uses a one-byte
+no-op state machine, and the training framework plugs in the cluster
+ledger (src/repro/coord).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from . import messages as m
+from .sim import Address, Node
+
+
+class StateMachine:
+    def apply(self, op: Any) -> Any:
+        raise NotImplementedError
+
+
+class NoopSM(StateMachine):
+    """The paper's evaluation state machine: every command is a no-op."""
+
+    def apply(self, op: Any) -> Any:
+        return "ok"
+
+
+class KVStoreSM(StateMachine):
+    """A tiny KV store, used by tests to check replica-state convergence."""
+
+    def __init__(self):
+        self.store: Dict[str, Any] = {}
+
+    def apply(self, op: Any) -> Any:
+        kind = op[0]
+        if kind == "set":
+            _, k, v = op
+            self.store[k] = v
+            return ("ok", k)
+        if kind == "get":
+            return self.store.get(op[1])
+        return "ok"
+
+
+class Replica(Node):
+    def __init__(
+        self,
+        addr: Address,
+        sm_factory: Callable[[], StateMachine] = NoopSM,
+        *,
+        leader_addrs: Tuple[Address, ...] = (),
+    ):
+        super().__init__(addr)
+        self.sm = sm_factory()
+        self.log: Dict[int, Any] = {}  # slot -> chosen value
+        self.exec_watermark = 0  # slots < this have been executed
+        self.leader_addrs = leader_addrs
+        self.executed: Dict[Tuple[str, int], Any] = {}  # cmd_id -> result (dedup)
+        # telemetry
+        self.executions = 0
+
+    def on_message(self, src: Address, msg: Any) -> None:
+        if isinstance(msg, m.Chosen):
+            self._on_chosen(src, msg)
+        elif isinstance(msg, m.RecoverA):
+            entries = tuple(sorted(self.log.items()))
+            self.send(src, m.RecoverB(watermark=self.exec_watermark, entries=entries))
+
+    def _on_chosen(self, src: Address, msg: m.Chosen) -> None:
+        if msg.slot in self.log:
+            assert _value_eq(self.log[msg.slot], msg.value), (
+                f"SAFETY VIOLATION at replica {self.addr}: slot {msg.slot} "
+                f"chose both {self.log[msg.slot]} and {msg.value}"
+            )
+        self.log[msg.slot] = msg.value
+        progressed = False
+        while self.exec_watermark in self.log:
+            value = self.log[self.exec_watermark]
+            self._execute(value)
+            self.exec_watermark += 1
+            progressed = True
+        if progressed:
+            # Scenario 3: tell leaders how much of the prefix we hold.
+            for p in self.leader_addrs:
+                self.send(p, m.ReplicaAck(watermark=self.exec_watermark))
+
+    def _execute(self, value: Any) -> None:
+        self.executions += 1
+        if not isinstance(value, m.Command):
+            return  # Noop holes, ConfigChange entries, etc. have no effect
+        if value.cmd_id in self.executed:
+            return  # at-most-once
+        result = self.sm.apply(value.op)
+        self.executed[value.cmd_id] = result
+        client = value.cmd_id[0]
+        self.send(client, m.ClientReply(cmd_id=value.cmd_id, result=result))
+
+
+def _value_eq(a: Any, b: Any) -> bool:
+    if isinstance(a, m.Noop) and isinstance(b, m.Noop):
+        return True
+    return a == b

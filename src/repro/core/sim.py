@@ -1,0 +1,227 @@
+"""Deterministic discrete-event network simulator.
+
+Models the paper's asynchronous network (Section 2.1): messages may be
+arbitrarily dropped, delayed, duplicated, and reordered; machines are
+crash-stop (no Byzantine behaviour); there is no clock synchronization
+between nodes (nodes only ever observe their own timers and inbound
+messages).
+
+Everything is driven by a single seeded RNG so that every run — including
+the hypothesis property tests and the paper-figure benchmarks — is exactly
+reproducible.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+Address = str
+
+
+@dataclass
+class NetworkConfig:
+    """Parameters of the simulated network.
+
+    Latency is ``base_latency + Exp(jitter)`` per message, matching the
+    single-AZ EC2 deployment of the paper's Section 8 when calibrated to
+    ~55us per hop.  ``extra_delay`` lets benchmarks inject message-class
+    specific delays (the Section 8.2 ablation delays Phase1B and MatchB by
+    250ms to simulate a WAN).
+    """
+
+    base_latency: float = 55e-6
+    jitter: float = 8e-6
+    drop_prob: float = 0.0
+    dup_prob: float = 0.0
+    # Optional hook: (src, dst, msg) -> additional seconds of delay.
+    extra_delay: Optional[Callable[[Address, Address, Any], float]] = None
+    # Optional hook: (src, dst, msg) -> True to force-drop.
+    drop_filter: Optional[Callable[[Address, Address, Any], bool]] = None
+
+
+class Timer:
+    """A cancellable timer handle."""
+
+    __slots__ = ("fired", "cancelled", "when")
+
+    def __init__(self, when: float):
+        self.when = when
+        self.fired = False
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class Node:
+    """Base class for protocol roles.
+
+    Subclasses implement ``on_message(src, msg)``.  All sends and timers go
+    through the simulator, so a node never observes global state.
+    """
+
+    def __init__(self, addr: Address):
+        self.addr = addr
+        self.sim: "Simulator" = None  # set on register
+        self.failed = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def on_start(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def on_message(self, src: Address, msg: Any) -> None:
+        raise NotImplementedError
+
+    def fail(self) -> None:
+        self.failed = True
+
+    def recover(self) -> None:
+        self.failed = False
+
+    # -- conveniences ------------------------------------------------------
+    def send(self, dst: Address, msg: Any) -> None:
+        self.sim.send(self.addr, dst, msg)
+
+    def broadcast(self, dsts, msg: Any) -> None:
+        for d in dsts:
+            self.sim.send(self.addr, d, msg)
+
+    def set_timer(self, delay: float, fn: Callable[[], None]) -> Timer:
+        return self.sim.set_timer(self, delay, fn)
+
+    @property
+    def now(self) -> float:
+        return self.sim.now
+
+
+class Simulator:
+    """Priority-queue discrete-event simulator."""
+
+    def __init__(self, seed: int = 0, net: Optional[NetworkConfig] = None):
+        self.rng = random.Random(seed)
+        self.net = net or NetworkConfig()
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.nodes: Dict[Address, Node] = {}
+        self._partitions: List[Tuple[Set[Address], Set[Address]]] = []
+        # telemetry
+        self.messages_sent = 0
+        self.messages_delivered = 0
+        self.messages_dropped = 0
+
+    # -- topology ----------------------------------------------------------
+    def register(self, node: Node) -> Node:
+        assert node.addr not in self.nodes, f"duplicate address {node.addr}"
+        node.sim = self
+        self.nodes[node.addr] = node
+        node.on_start()
+        return node
+
+    def partition(self, side_a: Set[Address], side_b: Set[Address]) -> None:
+        """Drop all messages between ``side_a`` and ``side_b`` until healed."""
+        self._partitions.append((set(side_a), set(side_b)))
+
+    def heal_partitions(self) -> None:
+        self._partitions.clear()
+
+    def _partitioned(self, src: Address, dst: Address) -> bool:
+        for a, b in self._partitions:
+            if (src in a and dst in b) or (src in b and dst in a):
+                return True
+        return False
+
+    # -- event queue -------------------------------------------------------
+    def _push(self, when: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (when, next(self._seq), fn))
+
+    def set_timer(self, node: Node, delay: float, fn: Callable[[], None]) -> Timer:
+        t = Timer(self.now + delay)
+
+        def fire() -> None:
+            if t.cancelled or node.failed:
+                return
+            t.fired = True
+            fn()
+
+        self._push(self.now + delay, fire)
+        return t
+
+    def call_at(self, when: float, fn: Callable[[], None]) -> None:
+        """Schedule a global (oracle / scenario-script) callback."""
+        self._push(when, fn)
+
+    # -- message transport ---------------------------------------------------
+    def send(self, src: Address, dst: Address, msg: Any) -> None:
+        self.messages_sent += 1
+        src_node = self.nodes.get(src)
+        if src_node is not None and src_node.failed:
+            return  # a crashed node sends nothing
+        if self._partitioned(src, dst):
+            self.messages_dropped += 1
+            return
+        cfg = self.net
+        if cfg.drop_filter is not None and cfg.drop_filter(src, dst, msg):
+            self.messages_dropped += 1
+            return
+        if cfg.drop_prob and self.rng.random() < cfg.drop_prob:
+            self.messages_dropped += 1
+            return
+        copies = 1
+        if cfg.dup_prob and self.rng.random() < cfg.dup_prob:
+            copies = 2
+        for _ in range(copies):
+            delay = cfg.base_latency
+            if cfg.jitter:
+                delay += self.rng.expovariate(1.0 / cfg.jitter)
+            if cfg.extra_delay is not None:
+                delay += cfg.extra_delay(src, dst, msg)
+            self._push(self.now + delay, lambda m=msg: self._deliver(src, dst, m))
+
+    def _deliver(self, src: Address, dst: Address, msg: Any) -> None:
+        node = self.nodes.get(dst)
+        if node is None or node.failed:
+            self.messages_dropped += 1
+            return
+        self.messages_delivered += 1
+        node.on_message(src, msg)
+
+    # -- control -------------------------------------------------------------
+    def fail(self, addr: Address) -> None:
+        self.nodes[addr].fail()
+
+    def recover(self, addr: Address) -> None:
+        self.nodes[addr].recover()
+
+    def step(self) -> bool:
+        if not self._heap:
+            return False
+        when, _, fn = heapq.heappop(self._heap)
+        assert when >= self.now - 1e-12, "time went backwards"
+        self.now = max(self.now, when)
+        fn()
+        return True
+
+    def run_until(self, t: float, max_events: int = 50_000_000) -> None:
+        events = 0
+        while self._heap and self._heap[0][0] <= t:
+            self.step()
+            events += 1
+            if events > max_events:
+                raise RuntimeError("event budget exhausted — livelock?")
+        self.now = max(self.now, t)
+
+    def run_for(self, dt: float, **kw) -> None:
+        self.run_until(self.now + dt, **kw)
+
+    def run_to_quiescence(self, max_events: int = 5_000_000) -> None:
+        events = 0
+        while self._heap:
+            self.step()
+            events += 1
+            if events > max_events:
+                raise RuntimeError("event budget exhausted — livelock?")

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These restate each kernel's math with materialized intermediates — no
+blocking, no online softmax — so a disagreement localizes bugs to the
+kernel's tiling/accumulation logic rather than the math.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+MASK = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, K, Sk, hd)
+    v: jax.Array,  # (B, K, Sk, hd)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    rep = H // K
+    qg = q.reshape(B, K, rep, Sq, hd)
+    s = jnp.einsum("bkrqd,bksd->bkrqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= qp >= kp
+    if window is not None:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok, s, MASK)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bksd->bkrqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, hd)
+    k_cache: jax.Array,  # (B, K, S, hd)
+    v_cache: jax.Array,  # (B, K, S, hd)
+    lengths: jax.Array,  # (B,)
+    *,
+    scale: float,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    rep = H // K
+    qg = q.reshape(B, K, rep, hd)
+    s = jnp.einsum(
+        "bkrd,bksd->bkrs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kp = jnp.arange(S)[None, :]
+    ok = kp < lengths[:, None]
+    if window is not None:
+        ok &= kp >= (lengths[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, MASK)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrs,bksd->bkrd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(x, a, Bm, Cm):
+    """x: (B,nh,nC,Q,hd); a: (B,nh,nC,Q); Bm/Cm: (B,nh,nC,Q,N)."""
+    x32, a32 = x.astype(jnp.float32), a.astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Q = x.shape[3]
+    cum = jnp.cumsum(a32, axis=-1)  # (B,nh,nC,Q)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(i >= j, jnp.exp(diff), 0.0)  # (B,nh,nC,Q,Q)
+    scores = jnp.einsum("bhcqn,bhcsn->bhcqs", C32, B32)
+    y = jnp.einsum("bhcqs,bhcsp->bhcqp", scores * L, x32)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B,nh,nC,Q)
+    states = jnp.einsum("bhcqn,bhcq,bhcqp->bhcnp", B32, decay_to_end, x32)
+    return y, states, cum

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk block.
+
+The chunked SSD algorithm (models/mamba2.py) splits into:
+  (a) intra-chunk quadratic block  — compute-bound, MXU-friendly,
+  (b) inter-chunk linear recurrence — tiny, carried by lax.scan in ops.py.
+
+This kernel implements (a): for each (batch, head, chunk) it computes
+
+  y_diag = (C B^T  ⊙  L) X        (Q,Q) x (Q,hd)
+  state  = (B ⊙ decay_to_end)^T X  -> (N, hd) end-of-chunk contribution
+
+where L = exp(segsum(a)) is the lower-triangular decay matrix.  The log
+decays are cumsum'd *inside* the kernel from the per-step ``a`` so only
+(Q,) scalars stream in per chunk.
+
+Grid: ``(B, nh, nchunks)``, all parallel.  Blocks: X (Q, hd), B/C (Q, N)
+live wholly in VMEM — Q=chunk (<=256), hd<=64, N<=128 keeps the working
+set ~(256x256 + 2x256x128 + 256x64) f32 ~ 0.4 MB, well under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(
+    x_ref,  # (1, 1, Q, hd)   x * dt
+    a_ref,  # (1, 1, 1, Q)    log decays dt*A
+    b_ref,  # (1, 1, Q, N)
+    c_ref,  # (1, 1, Q, N)
+    y_ref,  # (1, 1, Q, hd)   out: intra-chunk y
+    s_ref,  # (1, 1, N, hd)   out: end-of-chunk state contribution
+    co_ref,  # (1, 1, 1, Q)   out: cumulative log decay (for glue)
+    *,
+    chunk: int,
+):
+    x = x_ref[0, 0].astype(jnp.float32)  # (Q, hd)
+    a = a_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    B = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+
+    cum = jnp.cumsum(a)  # (Q,)
+    # L[i, j] = exp(cum[i] - cum[j]) for i >= j else 0
+    diff = cum[:, None] - cum[None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(i >= j, jnp.exp(diff), 0.0)  # (Q, Q)
+
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C B^T
+    y = jax.lax.dot_general(
+        scores * L, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, hd)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    state = jax.lax.dot_general(
+        B * decay_to_end[:, None],
+        x,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (N, hd)
+
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+    s_ref[0, 0, :, :] = state.astype(s_ref.dtype)
+    co_ref[0, 0, 0, :] = cum.astype(co_ref.dtype)
+
+
+def ssd_intra_chunk(
+    x: jax.Array,  # (B, nh, nC, Q, hd)  x * dt
+    a: jax.Array,  # (B, nh, nC, Q)      log decays
+    Bm: jax.Array,  # (B, nh, nC, Q, N)
+    Cm: jax.Array,  # (B, nh, nC, Q, N)
+    *,
+    interpret: bool = True,
+):
+    """Returns (y_diag (B,nh,nC,Q,hd), states (B,nh,nC,N,hd), cum (B,nh,nC,Q))."""
+    B_, nh, nC, Q, hd = x.shape
+    N = Bm.shape[-1]
+    BH = B_ * nh
+    xr = x.reshape(BH, nC, Q, hd)
+    ar = a.reshape(BH, 1, nC, Q).transpose(0, 2, 1, 3)  # (BH, nC, 1, Q)
+    br = Bm.reshape(BH, nC, Q, N)
+    cr = Cm.reshape(BH, nC, Q, N)
+
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=Q)
+    y, s, co = pl.pallas_call(
+        kernel,
+        grid=(BH, nC),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, nC, Q, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nC, N, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nC, 1, Q), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(xr, ar, br, cr)
+    return (
+        y.reshape(B_, nh, nC, Q, hd),
+        s.reshape(B_, nh, nC, N, hd),
+        co.reshape(B_, nh, nC, Q),
+    )

@@ -1,0 +1,12 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline analysis,
+elastic training and batched serving CLIs."""
+
+from .mesh import DCN_BW, HBM_BW, ICI_BW, PEAK_BF16_FLOPS, make_production_mesh
+
+__all__ = [
+    "DCN_BW",
+    "HBM_BW",
+    "ICI_BW",
+    "PEAK_BF16_FLOPS",
+    "make_production_mesh",
+]

@@ -1,0 +1,104 @@
+"""Drive the full dry-run matrix: every (arch x shape) cell on both the
+single-pod (16,16) and multi-pod (2,16,16) production meshes.
+
+Each cell runs in its own subprocess (fresh XLA, bounded memory); results
+land in artifacts/dryrun/*.json.  Existing artifacts are skipped unless
+--force.  Ends by printing the roofline table.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--mesh single|multi|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import List, Tuple
+
+from repro.configs import cells, normalize
+
+
+def artifact_path(out_dir: str, arch: str, shape: str, mesh: str) -> str:
+    return os.path.join(out_dir, f"{normalize(arch)}__{shape}__{mesh}.json")
+
+
+def run_one(arch: str, shape: str, multi: bool, out_dir: str, timeout: int) -> bool:
+    cmd = [
+        sys.executable,
+        "-m",
+        "repro.launch.dryrun",
+        "--arch",
+        arch,
+        "--shape",
+        shape,
+        "--out",
+        out_dir,
+    ]
+    if multi:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    t0 = time.time()
+    try:
+        res = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout, env=env
+        )
+    except subprocess.TimeoutExpired:
+        print(f"TIMEOUT {arch} {shape} multi={multi} after {timeout}s")
+        return False
+    dt = time.time() - t0
+    if res.returncode != 0:
+        print(f"FAIL {arch} {shape} multi={multi} ({dt:.0f}s)")
+        print(res.stderr[-2000:])
+        return False
+    tail = [l for l in res.stdout.splitlines() if l.strip()][-2:]
+    print(f"[{dt:6.0f}s] " + " | ".join(tail))
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    todo: List[Tuple[str, str, bool]] = []
+    for arch, shape in cells():
+        if args.only_arch and arch != args.only_arch:
+            continue
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            path = artifact_path(args.out, arch, shape, mesh_name)
+            if os.path.exists(path) and not args.force:
+                continue
+            todo.append((arch, shape, multi))
+    print(f"{len(todo)} cells to run")
+    failures = 0
+    for i, (arch, shape, multi) in enumerate(todo):
+        print(f"--- [{i + 1}/{len(todo)}] {arch} {shape} multi={multi}")
+        if not run_one(arch, shape, multi, args.out, args.timeout):
+            failures += 1
+    print(f"done; {failures} failures")
+
+    # summary table
+    from repro.launch.roofline import summarize_artifact
+
+    arts = []
+    for f in sorted(os.listdir(args.out)):
+        if f.endswith(".json"):
+            with open(os.path.join(args.out, f)) as fh:
+                arts.append(json.load(fh))
+    for a in arts:
+        print(summarize_artifact(a))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,423 @@
+"""Structural analysis of optimized HLO with loop-trip-count weighting.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE (verified
+in tests/launch/test_hlo_analysis.py) — a 64-layer scanned transformer
+under-reports FLOPs/bytes/collectives by ~64x.  This module re-derives
+all three from the HLO text itself:
+
+  * computations parse into blocks with per-op symbol tables (name ->
+    shape string), so operand shapes resolve even though the printer
+    omits them at use sites;
+  * while-loop trip counts come from the loop-condition computation's
+    comparison constant (``lax.scan`` lowers to ``lt(i, N)``);
+  * every computation gets an execution multiplier = product of the trip
+    counts of its enclosing while loops (ENTRY = 1), propagated through
+    ``body=/condition=/calls=/to_apply=`` edges;
+  * FLOPs = sum over dot/conv ops of 2 x prod(result dims) x prod(lhs
+    contracted dims) x multiplier;
+  * HBM traffic = sum over scheduled ops of effective (read + write)
+    bytes x multiplier.  Two effects matter for fidelity:
+      - fusion kernels whose parameter is consumed ONLY by
+        dynamic-slice read slice-sized bytes, not the full (stacked)
+        buffer — without this, scan-sliced layer weights are charged
+        L^2 bytes;
+      - kernels ROOTed at dynamic-update-slice write update-sized
+        bytes (in-place aliasing), not the full carried buffer.
+  * collectives keep op kind, result bytes, replica groups and the
+    multiplier for ring-model traffic accounting (roofline.py).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]"
+)
+_DEF_RE = re.compile(r"^\s*(ROOT\s+)?(%[\w.\-]+) = (.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# ops that move HBM bytes at kernel boundaries (scheduled computations)
+_TRAFFIC_OPS = set(COLLECTIVE_OPS) | {
+    "fusion", "dot", "convolution", "copy", "dynamic-slice",
+    "dynamic-update-slice", "slice", "concatenate", "pad", "reduce",
+    "transpose", "broadcast", "gather", "scatter", "select-and-scatter",
+    "sort", "convert", "iota", "rng-bit-generator",
+}
+
+
+def _shape_bytes(s: str, f32_as: int = 4) -> int:
+    """Byte count of all shapes in ``s``.  ``f32_as=2`` charges f32 tensors
+    at bf16 width — the CPU backend's float-normalization pass legalizes
+    every bf16 dot as convert-to-f32 (CPU has no native bf16 matmul), so
+    the compiled-for-CPU HLO carries f32 activations/weights/grads that
+    are bf16 on the TPU target.  Loop-interior traffic is therefore
+    charged at the target width (documented in EXPERIMENTS.md)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * (f32_as if dt == "f32" else _DTYPE_BYTES[dt])
+    return total
+
+
+def _shape_dims(s: str) -> List[List[int]]:
+    return [
+        [int(d) for d in dims.split(",") if d] for _, dims in _SHAPE_RE.findall(s)
+    ]
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_str: str
+    result_bytes: int
+    operands: List[str]
+    rhs: str
+    is_root: bool = False
+    flops: float = 0.0
+    group_size: int = 0
+    explicit_groups: Optional[List[List[int]]] = None
+    callee: Optional[str] = None
+    param_index: Optional[int] = None
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    ops: List[Op] = field(default_factory=list)
+    symtab: Dict[str, str] = field(default_factory=dict)
+    edges: List[Tuple[str, str]] = field(default_factory=list)
+    while_edges: List[Tuple[str, str]] = field(default_factory=list)
+    max_const: int = 0
+
+    def shape_of(self, name: str) -> str:
+        return self.symtab.get(name, "")
+
+
+def _parse_operands(rhs: str, op_start: int) -> List[str]:
+    paren = rhs.find("(", op_start)
+    if paren < 0:
+        return []
+    depth, arg = 0, ""
+    for ch in rhs[paren:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            arg += ch
+    return re.findall(r"%[\w.\-]+", arg)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr is not None:
+            cur = Computation(name=hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if m is None:
+            continue
+        is_root, name, rhs = bool(m.group(1)), m.group(2), m.group(3)
+        op_m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        if op_m is None:
+            continue
+        kind = op_m.group(1)
+        result_str = rhs[: op_m.start()]
+        cur.symtab[name] = result_str
+        for c in _CONST_RE.finditer(rhs):
+            cur.max_const = max(cur.max_const, int(c.group(1)))
+        for em in re.finditer(
+            r"(calls|to_apply|condition|body)=(%[\w.\-]+)", rhs
+        ):
+            cur.edges.append((em.group(1), em.group(2)))
+        if kind == "while":
+            cm = re.search(r"condition=(%[\w.\-]+)", rhs)
+            bm = re.search(r"body=(%[\w.\-]+)", rhs)
+            if cm and bm:
+                cur.while_edges.append((cm.group(1), bm.group(1)))
+
+        op = Op(
+            name=name,
+            kind=kind,
+            result_str=result_str,
+            result_bytes=_shape_bytes(result_str),
+            operands=_parse_operands(rhs, op_m.start()),
+            rhs=rhs,
+            is_root=is_root,
+        )
+        if kind == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                op.param_index = int(pm.group(1))
+        if kind == "fusion":
+            fm = re.search(r"calls=(%[\w.\-]+)", rhs)
+            if fm:
+                op.callee = fm.group(1)
+        if kind in ("dot", "convolution"):
+            dims = _shape_dims(result_str)
+            out_n = 1
+            for d in dims[0] if dims else []:
+                out_n *= d
+            k = 1
+            cm2 = _CONTRACT_RE.search(rhs)
+            if cm2 and op.operands:
+                lhs_dims = _shape_dims(cur.shape_of(op.operands[0]))
+                if lhs_dims:
+                    for idx in cm2.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims[0]):
+                            k *= lhs_dims[0][int(idx)]
+            op.flops = 2.0 * out_n * k
+        base = kind[:-6] if kind.endswith("-start") else kind
+        if base in COLLECTIVE_OPS:
+            op.kind = base
+            gm = _GROUPS_IOTA_RE.search(rhs)
+            if gm:
+                op.group_size = int(gm.group(2))
+            else:
+                groups = [
+                    [int(x) for x in g.split(",") if x.strip()]
+                    for g in re.findall(r"\{([0-9, ]+)\}", rhs)
+                ]
+                groups = [g for g in groups if g]
+                if groups:
+                    op.explicit_groups = groups
+                    op.group_size = max(len(g) for g in groups)
+        if kind.endswith("-done"):
+            continue  # paired with -start; counted there
+        cur.ops.append(op)
+    return comps, entry
+
+
+def multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {entry: 1.0}
+    for _ in range(24):
+        changed = False
+        for cname, comp in comps.items():
+            m = mult.get(cname)
+            if m is None:
+                continue
+            wcallees = {c for e in comp.while_edges for c in e}
+            for cond, body in comp.while_edges:
+                trip = max(comps[cond].max_const, 1) if cond in comps else 1
+                for callee in (cond, body):
+                    if mult.get(callee, 0.0) < m * trip:
+                        mult[callee] = m * trip
+                        changed = True
+            for kind, callee in comp.edges:
+                if callee in wcallees:
+                    continue
+                if mult.get(callee, 0.0) < m:
+                    mult[callee] = m
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _kernel_bodies(comps: Dict[str, Computation]) -> Set[str]:
+    """Computations referenced only via calls=/to_apply= (fusion kernels)."""
+    by_calls: Set[str] = set()
+    by_control: Set[str] = set()
+    for comp in comps.values():
+        for kind, callee in comp.edges:
+            if kind in ("calls", "to_apply"):
+                by_calls.add(callee)
+        for cond, body in comp.while_edges:
+            by_control.update((cond, body))
+    return by_calls - by_control
+
+
+def _fusion_param_reads(comp: Computation) -> Dict[int, Optional[int]]:
+    """Parameter index -> effective read bytes (None = full size).
+
+    Bitcasts/reshapes/copies are transparent: the (param -> bitcast ->
+    dynamic-slice) chains that lax.scan weight slicing produces still
+    count slice-sized."""
+    consumers: Dict[str, List[Op]] = {}
+    for op in comp.ops:
+        for o in op.operands:
+            consumers.setdefault(o, []).append(op)
+
+    _THRU = ("bitcast", "reshape", "copy")
+
+    def effective_read(name: str, depth: int = 0) -> Optional[int]:
+        cons = consumers.get(name, [])
+        if not cons or depth > 4:
+            return None
+        total = 0
+        for c in cons:
+            if c.kind in ("dynamic-slice", "slice") and c.operands and c.operands[0] == name:
+                total += c.result_bytes
+            elif c.kind in _THRU:
+                sub = effective_read(c.name, depth + 1)
+                if sub is None:
+                    return None
+                total += sub
+            else:
+                return None
+        return total
+
+    out: Dict[int, Optional[int]] = {}
+    for op in comp.ops:
+        if op.param_index is None:
+            continue
+        out[op.param_index] = effective_read(op.name)
+    return out
+
+
+def _fusion_write(comp: Computation, default: int, f32_as: int = 4) -> int:
+    """Write bytes; dynamic-update-slice roots (possibly behind bitcasts)
+    write update-sized bytes, not the full carried buffer."""
+    defs = {op.name: op for op in comp.ops}
+
+    def resolve(op: Op, depth: int = 0) -> Optional[int]:
+        if op.kind == "dynamic-update-slice" and len(op.operands) >= 2:
+            return _shape_bytes(comp.shape_of(op.operands[1]), f32_as)
+        if op.kind in ("bitcast", "reshape", "copy") and op.operands and depth < 4:
+            src = defs.get(op.operands[0])
+            if src is not None:
+                return resolve(src, depth + 1)
+        return None
+
+    for op in comp.ops:
+        if op.is_root:
+            r = resolve(op)
+            return default if r is None else r
+    return default
+
+
+def _effective_bytes(
+    op: Op, comp: Computation, comps: Dict[str, Computation], f32_as: int = 4
+) -> float:
+    """Effective read+write bytes for one scheduled op."""
+    if op.kind == "dynamic-slice":
+        return 2.0 * _shape_bytes(op.result_str, f32_as)
+    if op.kind == "dynamic-update-slice":
+        upd = (
+            _shape_bytes(comp.shape_of(op.operands[1]), f32_as)
+            if len(op.operands) >= 2
+            else _shape_bytes(op.result_str, f32_as)
+        )
+        return 2.0 * upd
+    if op.kind in ("get-tuple-element", "tuple", "bitcast", "parameter", "constant"):
+        return 0.0
+    reads = sum(_shape_bytes(comp.shape_of(o), f32_as) for o in op.operands)
+    writes = _shape_bytes(op.result_str, f32_as)
+    if op.kind == "fusion" and op.callee in comps:
+        body = comps[op.callee]
+        eff = _fusion_param_reads(body)
+        reads = 0.0
+        for i, o in enumerate(op.operands):
+            e = eff.get(i)
+            reads += _shape_bytes(comp.shape_of(o), f32_as) if e is None else e * (
+                f32_as / 4.0 if f32_as != 4 else 1.0
+            )
+        writes = _fusion_write(body, _shape_bytes(op.result_str, f32_as), f32_as)
+    return reads + writes
+
+
+@dataclass
+class HloSummary:
+    flops: float
+    traffic_bytes: float
+    collectives: List[Dict]
+    raw_flops: float = 0.0
+
+
+def analyze(text: str, *, bf16_target: bool = False) -> HloSummary:
+    """``bf16_target=True`` charges loop-interior f32 tensors at 2 bytes
+    (the TPU-target width; see _shape_bytes).  Top-level (mult == 1)
+    tensors — optimizer state, fp32 masters — stay at 4 bytes."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        for n in comps:
+            if "main" in n:
+                entry = n
+                break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult = multipliers(comps, entry)
+    kernels = _kernel_bodies(comps)
+
+    flops = raw_flops = traffic = 0.0
+    collectives: List[Dict] = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        scheduled = cname not in kernels
+        f32_as = 2 if (bf16_target and m > 1.0) else 4
+        for op in comp.ops:
+            if op.flops:
+                flops += op.flops * m
+                raw_flops += op.flops
+            if scheduled and op.kind in _TRAFFIC_OPS:
+                traffic += _effective_bytes(op, comp, comps, f32_as) * m
+            if op.kind in COLLECTIVE_OPS:
+                collectives.append(
+                    {
+                        "op": op.kind,
+                        "result_bytes": _shape_bytes(op.result_str, f32_as),
+                        "group_size": op.group_size,
+                        "explicit_groups": op.explicit_groups,
+                        "count": m,
+                        "line": op.rhs[:160],
+                    }
+                )
+    return HloSummary(
+        flops=flops, traffic_bytes=traffic, collectives=collectives, raw_flops=raw_flops
+    )
+
+
+def top_buffers(text: str, n: int = 15) -> List[Tuple[float, str, str]]:
+    """Largest result buffers with op kinds — memory debugging aid."""
+    comps, entry = parse_hlo(text)
+    out = []
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind in ("parameter", "constant"):
+                continue
+            out.append((op.result_bytes / 2**30, op.kind, f"{comp.name}/{op.name}"))
+    out.sort(reverse=True)
+    return out[:n]

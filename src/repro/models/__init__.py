@@ -1,0 +1,14 @@
+"""Model zoo: 10 assigned architectures, pure-functional JAX."""
+
+from .config import ModelConfig
+from .encdec import EncDecLM
+from .lm import LM
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+__all__ = ["ModelConfig", "LM", "EncDecLM", "get_model"]

@@ -1,0 +1,147 @@
+"""Mixture-of-Experts FFN with grouped, capacity-bounded einsum dispatch.
+
+GShard/Switch-style routing adapted for TPU memory: tokens are split into
+groups of ``cfg.moe_group_size`` and dispatched within each group via a
+one-hot (G, Tg, E, Cg) tensor.  The dispatch tensor is the memory knob —
+its footprint is ``T * Tg * k * capacity_factor`` elements, independent of
+the global token count, so the 1M-token grok-1 training shape stays
+feasible.  Expert weights are (E, D, F) batched einsums; sharding.py
+decides whether E or F rides the 'model' mesh axis (expert vs tensor
+parallelism) based on divisibility.
+
+Top-2 (grok-1) uses normalized top-k gate weights; top-1 (llama4-scout)
+additionally routes every token through ``n_shared_experts`` dense shared
+experts, per the Llama-4 early-fusion MoE design.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import activation_fn, mlp_apply, mlp_init
+
+Array = jax.Array
+
+
+def moe_init(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Array]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    keys = jax.random.split(key, 5)
+    s_in, s_out = D ** -0.5, F ** -0.5
+    p = {
+        "router": (jax.random.normal(keys[0], (D, E)) * s_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(keys[1], (E, D, F)) * s_in).astype(dtype),
+        "w_gate": (jax.random.normal(keys[2], (E, D, F)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(keys[3], (E, F, D)) * s_out).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(
+            cfg, keys[4], dtype, d_ff=cfg.d_ff * cfg.n_shared_experts
+        )
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    cap = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def moe_apply(
+    cfg: ModelConfig, p, x: Array, *, dropless: bool = False
+) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, S, D) -> (B, S, D), plus aux metrics (load-balance loss).
+
+    ``dropless=True`` sets capacity = group size so no token is ever
+    dropped — used for decode, where groups are tiny (one token per
+    sequence) and capacity-dropping would make decode diverge from the
+    teacher-forced forward pass."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    Tg = min(cfg.moe_group_size, T)
+    G = T // Tg
+    assert G * Tg == T, f"token count {T} not divisible by group size {Tg}"
+    xg = xt.reshape(G, Tg, D)
+    C = Tg if dropless else _capacity(cfg, Tg)
+
+    # -- routing (fp32 for numerical stability) ---------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+
+    # top-k gates per token
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # -- capacity assignment ------------------------------------------------
+    # position of each (token, choice) in its expert's buffer; computed by a
+    # cumulative sum over the one-hot expert choices in token order.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G, Tg, k, E)
+    flat = onehot.reshape(G, Tg * k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (G, Tg*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, Tg, k)
+    keep = pos < C  # tokens past capacity are dropped
+    gate_vals = gate_vals * keep
+
+    # dispatch (G, Tg, E, C) one-hot, combine weights in the same layout
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh * keep[..., None])
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gate_vals, onehot, pos_oh)
+
+    # -- expert computation ----------------------------------------------
+    def pin(t, spec_tail):
+        # Pin the dispatch-path activations: token groups ride the dp axes,
+        # the expert FFN width rides 'model' (TP-within-expert).  Without
+        # these constraints GSPMD replicates the expert-gradient matmuls
+        # (observed: full (E,D,F) f32 per-device temporaries).
+        if cfg.sharding_policy == "none":
+            return t
+        from .sharding import DP_AXES, _constrain, _mesh_sizes, _size
+        from jax.sharding import PartitionSpec as P
+
+        sizes = _mesh_sizes()
+        if not sizes:
+            return t
+        dp = tuple(a for a in DP_AXES if a in sizes)
+        g_ax = dp if (dp and t.shape[0] % _size(sizes, dp) == 0) else None
+        tail = [
+            ax if (ax is None or t.shape[1 + i] % sizes.get(ax, 1) == 0) else None
+            for i, ax in enumerate(spec_tail)
+        ]
+        return _constrain(t, P(g_ax, *tail))
+
+    # Expert parallelism when E divides 'model' (llama4-scout: 16 experts):
+    # the dispatched activations shard over experts, so each device runs
+    # only its experts' FFN and no cross-device expert-weight traffic
+    # exists.  Otherwise (grok-1: 8 experts on a 16-way axis) experts are
+    # TP-within-expert: activations keep E unsharded, FFN width rides
+    # 'model'.
+    from .sharding import _mesh_sizes
+
+    sizes = _mesh_sizes() or {}
+    ep = "model" if (sizes.get("model", 1) > 1 and E % sizes["model"] == 0) else None
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)  # (G,E,C,D)
+    xe = pin(xe, (ep, None, None))
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_in"])
+    g = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    h = pin(act(g) * h, (ep, None, "model" if ep is None else None))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"])  # (G,E,C,D)
+    ye = pin(ye, (ep, None, None))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)  # (G,Tg,D)
+    y = y.reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(cfg, p["shared"], x)
+
+    # -- aux: Switch load-balance loss + routing metrics --------------------
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    ce = jnp.mean(onehot.sum(2), axis=(0, 1))  # fraction routed per expert
+    aux = {
+        "moe_lb_loss": E * jnp.sum(me * ce),
+        "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

@@ -1,0 +1,342 @@
+"""PartitionSpec rules for the (pod, data, model) production mesh.
+
+Two sharding POLICIES (DESIGN.md Section 4), chosen per (family x step
+kind) — the napkin math that selects them is recorded in EXPERIMENTS.md
+§Perf pass 0:
+
+  * ``tp``  — batch over ('pod','data'); tensor parallelism on 'model'
+    (attention heads / FFN width / experts / SSM heads); large weights
+    FSDP their input dim on 'data'.  Used by every SERVING path (weights
+    stay resident; decode can't re-gather weights per token) and by
+    MoE / SSM / hybrid training.
+  * ``fsdp`` — no tensor parallelism: the batch shards over
+    ('pod','data') and the *sequence* over 'model' (dense training
+    compute is embarrassingly parallel over tokens); every weight/
+    optimizer tensor shards over the FLAT ('pod','data','model') axis
+    set and is all-gathered at use (ZeRO-3).  Collective cost per layer
+    is weight-sized (independent of the token count), which beats TP's
+    activation-sized collectives by ~an order of magnitude at the
+    assigned 1M-token training shapes.  Used by dense / vlm / encdec
+    training.
+
+Divisibility decides fallbacks everywhere: e.g. grok-1's 8 KV heads
+can't shard a 16-way 'model' axis, so its KV projections replicate
+there; its 8 experts shard the expert FFN width instead of the expert
+count, while llama4-scout's 16 experts ride 'model' directly (EP).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+DP_AXES = ("pod", "data")  # batch rides the product of these
+ALL_AXES = ("pod", "data", "model")
+
+
+def axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _dp(mesh_axes: Dict[str, int]) -> Tuple[str, ...]:
+    return tuple(a for a in DP_AXES if a in mesh_axes)
+
+
+def _present(mesh_axes: Dict[str, int], axes=ALL_AXES) -> Tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh_axes)
+
+
+def _size(mesh_axes: Dict[str, int], axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh_axes[a]
+    return n
+
+
+def _div(n: int, mesh_axes: Dict[str, int], axis: str) -> bool:
+    return axis in mesh_axes and n % mesh_axes[axis] == 0
+
+
+def policy_for(cfg: ModelConfig, kind: str) -> str:
+    """kind: train | prefill | decode."""
+    if kind == "train" and cfg.family in ("dense", "vlm", "encdec"):
+        return "fsdp"
+    # ssm/hybrid train: tp (SSM heads ride 'model'; the residual stream is
+    # sequence-sharded between layers so remat saves stay bounded).
+    return "tp"
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+def param_specs(
+    cfg: ModelConfig, params: Any, mesh_axes: Dict[str, int], policy: str = "tp"
+) -> Any:
+    """A pytree of PartitionSpec congruent to ``params``."""
+    flat = _present(mesh_axes)
+    flat_n = _size(mesh_axes, flat)
+    dp = _dp(mesh_axes)
+    dp_n = _size(mesh_axes, dp)
+
+    def fsdp_rule(shape, pre) -> P:
+        # Shard the first dim divisible by the flat axis set; fall back to
+        # ('pod','data') and then nothing.  One sharded dim is enough —
+        # the tensor is fully distributed over all devices.
+        for cand in (flat, dp):
+            n = _size(mesh_axes, cand) if cand else 1
+            if not cand or n == 1:
+                continue
+            for i, d in enumerate(shape):
+                if d % n == 0 and d >= n:
+                    spec = [None] * len(shape)
+                    spec[i] = cand if len(cand) > 1 else cand[0]
+                    return P(*pre, *spec)
+        return P(*pre, *(None,) * len(shape))
+
+    def rule(path, leaf) -> P:
+        names = [p.key if hasattr(p, "key") else str(p) for p in path]
+        name = names[-1]
+        stacked = any(n in ("blocks", "enc_blocks", "dec_blocks") for n in names)
+        pre = (None,) if stacked else ()
+        shape = leaf.shape[1:] if stacked else leaf.shape
+
+        if policy == "fsdp":
+            if len(shape) <= 1:
+                return P(*pre, *(None,) * len(shape))
+            return fsdp_rule(shape, pre)
+
+        def spec(*axes) -> P:
+            fixed = []
+            for dim, ax in zip(shape, axes):
+                if ax is None:
+                    fixed.append(None)
+                elif isinstance(ax, tuple):
+                    n = _size(mesh_axes, tuple(a for a in ax if a in mesh_axes))
+                    fixed.append(
+                        tuple(a for a in ax if a in mesh_axes)
+                        if (n > 1 and dim % n == 0)
+                        else None
+                    )
+                else:
+                    fixed.append(ax if _div(dim, mesh_axes, ax) else None)
+            return P(*pre, *fixed)
+
+        if name in ("embed",):
+            return spec("model", "data")
+        if name == "unembed":
+            return spec("data", "model")
+        if name == "wq":
+            return spec("data", "model", None)
+        if name in ("wk", "wv"):
+            return spec("data", "model", None)  # falls back if K % model != 0
+        if name == "wo":
+            return spec("model", None, "data")
+        if name in ("w_in", "w_gate", "w_out"):
+            if len(shape) == 3:  # MoE expert weights (E, D, F) / (E, F, D)
+                E = shape[0]
+                if _div(E, mesh_axes, "model"):
+                    return spec("model", "data", None)  # expert parallelism
+                if name == "w_out":
+                    return spec(None, "model", "data")  # TP-within-expert
+                return spec(None, "data", "model")
+            if name == "w_out":
+                return spec("model", "data")
+            return spec("data", "model")
+        if name == "router":
+            return spec("data", None)
+        if name == "in_proj":
+            return spec("data", "model")
+        if name == "out_proj":
+            return spec("model", "data")
+        if name == "conv_w":
+            return spec(None, "model")
+        return P(*pre, *(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# --------------------------------------------------------------------------
+# Batch specs
+# --------------------------------------------------------------------------
+def batch_spec(
+    cfg: ModelConfig,
+    batch_shape: Tuple[int, ...],
+    mesh_axes: Dict[str, int],
+    policy: str = "tp",
+) -> P:
+    """Tokens (B, S): batch over (pod, data); under the fsdp policy the
+    sequence additionally shards over 'model' (sequence parallelism)."""
+    B = batch_shape[0]
+    dp = _dp(mesh_axes)
+    rest = [None] * (len(batch_shape) - 1)
+    if policy == "fsdp" and cfg.family in ("ssm", "hybrid"):
+        # flat batch sharding, no seq sharding (recurrence is sequential)
+        for cand in (_present(mesh_axes), dp):
+            n = _size(mesh_axes, cand) if cand else 1
+            if cand and n > 1 and B % n == 0:
+                return P(cand, *rest)
+        return P(*(None,) * len(batch_shape))
+    b_ax = dp if (dp and B % _size(mesh_axes, dp) == 0) else None
+    if (
+        policy == "fsdp"
+        and len(batch_shape) >= 2
+        and _div(batch_shape[1], mesh_axes, "model")
+    ):
+        rest[0] = "model"
+    if b_ax is None:
+        return P(*(None,) * len(batch_shape))
+    return P(b_ax, *rest)
+
+
+# --------------------------------------------------------------------------
+# Activation constraints (used inside model code; read cfg.sharding_policy)
+# --------------------------------------------------------------------------
+def _mesh_sizes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return None
+    if mesh is None or not mesh.axis_names:
+        return None
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _constrain(x, spec: P):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def constrain_residual(cfg: ModelConfig, x):
+    """(B, S, D) residual stream at layer boundaries.
+
+    tp policy: seq over 'model' (Megatron SP — bounds remat memory).
+    fsdp policy: seq over 'model' (it arrived that way; keep it pinned).
+    """
+    if cfg.sharding_policy not in ("tp", "fsdp"):
+        return x
+    sizes = _mesh_sizes()
+    if not sizes:
+        return x
+    dp = _dp(sizes)
+    b_ax = dp if (dp and x.shape[0] % _size(sizes, dp) == 0) else None
+    s_ax = "model" if _div(x.shape[1], sizes, "model") else None
+    return _constrain(x, P(b_ax, s_ax, None))
+
+
+def constrain_attn_qkv(cfg: ModelConfig, q, k, v):
+    """Attention boundary (B, S, H|K, hd).
+
+    tp: heads over 'model', sequence gathered (the SP all-gather).
+    fsdp: q stays SEQUENCE-sharded over 'model' (each device computes its
+    query chunk against the full K/V — flash-decode-style partitioning);
+    K/V gather the sequence and replicate heads.
+    """
+    if cfg.sharding_policy not in ("tp", "fsdp"):
+        return q, k, v
+    if cfg.sharding_policy == "fsdp" and cfg.family in ("ssm", "hybrid"):
+        return q, k, v  # batch is flat-sharded; attention is row-local
+    sizes = _mesh_sizes()
+    if not sizes:
+        return q, k, v
+    dp = _dp(sizes)
+
+    def bax(x):
+        return dp if (dp and x.shape[0] % _size(sizes, dp) == 0) else None
+
+    if cfg.sharding_policy == "tp":
+        def heads(x):
+            h_ax = "model" if _div(x.shape[2], sizes, "model") else None
+            return _constrain(x, P(bax(x), None, h_ax, None))
+
+        return heads(q), heads(k), heads(v)
+
+    s_ax = "model" if _div(q.shape[1], sizes, "model") else None
+    q = _constrain(q, P(bax(q), s_ax, None, None))
+    k = _constrain(k, P(bax(k), None, None, None))
+    v = _constrain(v, P(bax(v), None, None, None))
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# Decode-state specs (serving always uses the tp policy)
+# --------------------------------------------------------------------------
+def decode_state_specs(cfg: ModelConfig, state: Any, mesh_axes: Dict[str, int]) -> Any:
+    """KV caches (L, B, S, K, hd): batch over dp when divisible; K over
+    'model' when divisible, else the *sequence* dim rides 'model'
+    (flash-decode style sharded-KV attention)."""
+    dp = _dp(mesh_axes)
+    dp_n = _size(mesh_axes, dp)
+
+    def rule(path, leaf):
+        names = [p.key if hasattr(p, "key") else str(p) for p in path]
+        shape = leaf.shape
+        if "pos" in names:
+            return P(None)
+        if "kv" in names or "shared_kv" in names:
+            L, B, S, K, hd = shape
+            b_ax = dp if (dp and B % dp_n == 0) else None
+            if _div(K, mesh_axes, "model"):
+                return P(None, b_ax, None, "model", None)
+            if _div(S, mesh_axes, "model"):
+                return P(None, b_ax, "model", None, None)
+            return P(None, b_ax, None, None, None)
+        if "xk" in names or "xv" in names:
+            L, B, S, K, hd = shape
+            b_ax = dp if (dp and B % dp_n == 0) else None
+            k_ax = "model" if _div(K, mesh_axes, "model") else None
+            return P(None, b_ax, None, k_ax, None)
+        if "h" in names and len(shape) == 4:  # ssm state (B, nh, hd, N)
+            B, nh, hd, N = shape
+            b_ax = dp if (dp and B % dp_n == 0) else None
+            h_ax = "model" if _div(nh, mesh_axes, "model") else None
+            return P(b_ax, h_ax, None, None)
+        if "conv" in names and len(shape) == 3:  # (B, W-1, C)
+            B = shape[0]
+            b_ax = dp if (dp and B % dp_n == 0) else None
+            c_ax = "model" if _div(shape[-1], mesh_axes, "model") else None
+            return P(b_ax, None, c_ax)
+        if len(shape) >= 5:  # stacked ssm states (L, B, ...)
+            B = shape[1]
+            b_ax = dp if (dp and B % dp_n == 0) else None
+            rest = [None] * (len(shape) - 2)
+            if len(shape) == 5 and _div(shape[2], mesh_axes, "model"):
+                rest[0] = "model"  # (L, B, nh, hd, N)
+            return P(None, b_ax, *rest)
+        if len(shape) == 4:  # stacked conv states (L, B, W-1, C)
+            B = shape[1]
+            b_ax = dp if (dp and B % dp_n == 0) else None
+            c_ax = "model" if _div(shape[-1], mesh_axes, "model") else None
+            return P(None, b_ax, None, c_ax)
+        return P(*(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(rule, state)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# Backwards-compatible aliases (older call sites / tests)
+def constrain_seq_sharded(x, *, seq_axis: int = 1):
+    sizes = _mesh_sizes()
+    if not sizes:
+        return x
+    dp = _dp(sizes)
+    spec: list = [None] * x.ndim
+    if dp and x.shape[0] % _size(sizes, dp) == 0:
+        spec[0] = dp
+    if _div(x.shape[seq_axis], sizes, "model"):
+        spec[seq_axis] = "model"
+    return _constrain(x, P(*spec))

@@ -1,0 +1,124 @@
+"""Sharded checkpointing with consensus-committed manifests.
+
+Layout: one ``.npz`` per host-shard of the flattened pytree plus a JSON
+manifest {step, arch, tree structure, leaf shapes/dtypes, shard map,
+content hashes}.  A checkpoint COUNTS only once its manifest is chosen in
+the cluster ledger and replicated on f+1 replicas — the paper's GC
+Scenario 3 applied to training state: only then may pre-checkpoint ledger
+state be garbage-collected and old pods released (coord/control_plane).
+
+On this container writes go to local disk; the shard->host mapping is the
+part a real deployment points at object storage.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+Array = jax.Array
+
+# npz cannot store ml_dtypes natively; round-trip via a same-width int view.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _leaf_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(p, "key", p)) for p in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save(
+    directory: str,
+    step: int,
+    tree: Any,
+    *,
+    meta: Optional[Dict[str, Any]] = None,
+    n_shards: int = 1,
+) -> Dict[str, Any]:
+    """Write a sharded checkpoint; returns the manifest (to be committed
+    to the ledger by the caller)."""
+    os.makedirs(directory, exist_ok=True)
+    names, leaves, _ = _leaf_paths(tree)
+    shards: Dict[int, Dict[str, np.ndarray]] = {i: {} for i in range(n_shards)}
+    entries = []
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(leaf)
+        stored = arr
+        if str(arr.dtype) in _VIEW_AS:
+            stored = arr.view(_VIEW_AS[str(arr.dtype)])
+        shard = i % n_shards
+        key = f"leaf{i}"
+        shards[shard][key] = stored
+        entries.append(
+            {
+                "name": name,
+                "key": key,
+                "shard": shard,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        )
+    files = {}
+    for shard, blobs in shards.items():
+        path = os.path.join(directory, f"step{step:08d}_shard{shard}.npz")
+        np.savez(path, **blobs)
+        with open(path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()[:16]
+        files[str(shard)] = {"path": os.path.basename(path), "sha256_16": digest}
+    manifest = {
+        "step": step,
+        "entries": entries,
+        "files": files,
+        "n_shards": n_shards,
+        "meta": meta or {},
+    }
+    mpath = os.path.join(directory, f"step{step:08d}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+def restore(directory: str, manifest: Dict[str, Any], like: Any) -> Any:
+    """Restore into the structure of ``like`` (validates shapes/dtypes)."""
+    names, leaves, treedef = _leaf_paths(like)
+    blobs = {}
+    for shard, info in manifest["files"].items():
+        path = os.path.join(directory, info["path"])
+        with open(path, "rb") as f:
+            data = f.read()
+        digest = hashlib.sha256(data).hexdigest()[:16]
+        if digest != info["sha256_16"]:
+            raise IOError(f"checkpoint shard {shard} corrupt: {path}")
+        with np.load(path) as z:
+            for k in z.files:
+                blobs[(int(shard), k)] = z[k]
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    out = []
+    for name, leaf in zip(names, leaves):
+        e = by_name[name]
+        arr = blobs[(e["shard"], e["key"])]
+        if e["dtype"] in _VIEW_AS:
+            arr = arr.view(getattr(ml_dtypes, e["dtype"]))
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {name}: {arr.shape} vs {np.shape(leaf)}")
+        out.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+    return treedef.unflatten(out)
+
+
+def latest_manifest(directory: str) -> Optional[Dict[str, Any]]:
+    if not os.path.isdir(directory):
+        return None
+    manifests = sorted(p for p in os.listdir(directory) if p.endswith(".manifest.json"))
+    if not manifests:
+        return None
+    with open(os.path.join(directory, manifests[-1])) as f:
+        return json.load(f)

@@ -1,0 +1,70 @@
+"""Int8 error-feedback gradient compression (beyond-paper, for the DCN
+'pod' axis where cross-pod all-reduce bandwidth is the scarce resource).
+
+Each gradient tensor is quantized blockwise to int8 before the cross-pod
+reduction; the quantization residual is fed back into the next step's
+gradient (error feedback), which keeps SGD/Adam convergence (Karimireddy
+et al., 2019).  8x byte reduction on the pod axis at the cost of one
+extra fp32 residual buffer per tensor (sharded like the grads).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def compress(g: Array, block: int = 256) -> Tuple[Array, Array]:
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: Array, scale: Array, shape) -> Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_tree(grads: Any, residuals: Any, block: int = 256):
+    """Error-feedback compression over a pytree.
+
+    Returns (compressed pytree of (q, scale), new residuals).  The caller
+    transmits/reduces the compressed form and applies ``decompress_tree``.
+    """
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = compress(corrected, block)
+        approx = decompress(q, s, g.shape)
+        return (q, s), corrected - approx
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = treedef.unflatten([o[0] for o in out])
+    new_res = treedef.unflatten([o[1] for o in out])
+    return comp, new_res
+
+
+def decompress_tree(comp: Any, like: Any):
+    flat_c, treedef = jax.tree.flatten(like)
+    comp_flat = treedef.flatten_up_to(comp)
+    return treedef.unflatten(
+        [decompress(q, s, g.shape) for (q, s), g in zip(comp_flat, flat_c)]
+    )
+
+
+def zero_residuals(params: Any):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,44 @@
+"""Gradient quorum — the data-plane analogue of the paper's thriftiness.
+
+The paper's thrifty leader sends Phase2A to a *quorum* of acceptors
+instead of all of them, trading failure resilience for normal-case cost.
+At training scale the same trade appears as straggler mitigation: the
+cross-pod gradient reduction proceeds once a quorum of pods contributed;
+missing pods' shards are dropped and the mean is rescaled by the live
+count (unbiased backup-worker estimator).
+
+The control plane (coord/) decides the per-step pod mask via the
+Matchmaker-MultiPaxos ledger, so every pod agrees on which gradients were
+in the quorum — exactly the role Phase 2 quorum certificates play in the
+paper.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quorum_mean(per_pod_grads: Any, pod_mask: Array) -> Any:
+    """Masked mean over the leading pod axis of every leaf.
+
+    per_pod_grads: pytree of (P, ...) stacked per-pod gradients.
+    pod_mask: (P,) 0/1 — pods in the quorum this step.
+    """
+    denom = jnp.maximum(jnp.sum(pod_mask), 1.0)
+
+    def one(g):
+        m = pod_mask.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        return jnp.sum(g * m, axis=0) / denom.astype(g.dtype)
+
+    return jax.tree.map(one, per_pod_grads)
+
+
+def quorum_ok(pod_mask: Array, f: int) -> Array:
+    """A quorum needs all-but-f pods (majority-style threshold)."""
+    P = pod_mask.shape[0]
+    return jnp.sum(pod_mask) >= (P - f)

@@ -1,0 +1,82 @@
+"""Elastic trainer: train through scale-up/scale-down/failover with the
+consensus control plane deciding membership; loss keeps falling and the
+ledger stays safe.  Runs single-device here; the subprocess test in
+test_elastic_multidevice.py exercises 8 fake devices."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.coord import ElasticConfig, ElasticTrainer
+from repro.train import OptConfig
+from repro.train.data import DataConfig
+
+
+def make_trainer(tmp_path, pods=("pod0",), seed=0):
+    cfg = get_smoke_config("stablelm_12b").replace(dtype="float32")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=0)
+    ocfg = OptConfig(lr=3e-3, warmup_steps=5, total_steps=200)
+    return ElasticTrainer(
+        cfg,
+        ocfg,
+        dcfg,
+        pods=list(pods),
+        ecfg=ElasticConfig(checkpoint_dir=str(tmp_path), checkpoint_every=8, commit_every=4),
+        seed=seed,
+    )
+
+
+def test_train_and_ledger_progress(tmp_path):
+    tr = make_trainer(tmp_path)
+    tr.run(12)
+    assert len(tr.losses) == 12
+    assert all(np.isfinite(tr.losses))
+    assert tr.controller.ledger().last_step >= 8
+    assert tr.controller.durable_step() >= 8  # checkpoint committed
+    tr.controller.check_safety()
+
+
+def test_elastic_scale_without_stall(tmp_path):
+    tr = make_trainer(tmp_path)
+    tr.run(6)
+    tel = tr.scale_to(["pod0", "pod1"])  # scale UP
+    assert tel["activation_ms"] < 5.0
+    tr.run(6)
+    assert tr.epoch == 1
+    assert len(tr.pods) == 2
+    # ledger stall counter: the leader never queued a command
+    assert tr.controller.dep.leader.stall_count == 0
+    tr.run(2)
+    tel = tr.scale_to(["pod0"])  # scale DOWN
+    tr.run(4)
+    assert tr.epoch == 2 and len(tr.pods) == 1
+    assert all(np.isfinite(tr.losses))
+    tr.controller.check_safety()
+
+
+def test_failover_and_restore(tmp_path):
+    tr = make_trainer(tmp_path, pods=("pod0", "pod1"))
+    tr.run(10)
+    loss_before = tr.losses[-1]
+    tr.fail_and_replace("pod1", "pod2")
+    tr.run(6)
+    assert "pod2" in tr.pods and "pod1" not in tr.pods
+    # consensus-committed checkpoint restore
+    step_before = tr.step
+    assert tr.restore_latest()
+    assert tr.step <= step_before
+    tr.run(4)
+    assert all(np.isfinite(tr.losses))
+    tr.controller.check_safety()
+
+
+def test_loss_decreases_through_reconfigs(tmp_path):
+    tr = make_trainer(tmp_path)
+    tr.run(10)
+    tr.scale_to(["pod0", "pod1"])
+    tr.run(10)
+    tr.scale_to(["pod0", "pod2"])
+    tr.run(10)
+    first, last = np.mean(tr.losses[:5]), np.mean(tr.losses[-5:])
+    assert last < first - 0.3  # learning continued across reconfigs

@@ -1,0 +1,88 @@
+"""Matchmaker Fast Paxos (Section 7, Algorithm 5): f+1 acceptors."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fast_paxos import FastAcceptor, FastClient, FastCoordinator
+from repro.core.matchmaker import Matchmaker
+from repro.core.oracle import Oracle
+from repro.core.quorums import Configuration
+from repro.core.sim import NetworkConfig, Simulator
+
+
+def build_fast(*, seed: int, f: int = 1, n_clients: int = 1, drop: float = 0.0):
+    sim = Simulator(seed=seed, net=NetworkConfig(drop_prob=drop))
+    oracle = Oracle()
+    mms = [Matchmaker(f"mm{i}") for i in range(2 * f + 1)]
+    acc_addrs = tuple(f"a{i}" for i in range(f + 1))  # f+1 acceptors!
+    coord = FastCoordinator(
+        "coord",
+        0,
+        matchmakers=tuple(mm.addr for mm in mms),
+        oracle=oracle,
+        config_provider=lambda attempt: Configuration.fast_f_plus_1(attempt, acc_addrs),
+        f=f,
+    )
+    accs = [FastAcceptor(a, learners=("coord",)) for a in acc_addrs]
+    clients = [
+        FastClient(f"c{i}", acc_addrs, f"value{i}") for i in range(n_clients)
+    ]
+    for n in [*mms, *accs, coord, *clients]:
+        sim.register(n)
+    return sim, oracle, coord, accs, clients
+
+
+def test_fast_path_single_client():
+    """One client, no conflict: value chosen on the fast path."""
+    sim, oracle, coord, _, clients = build_fast(seed=0)
+    coord.start_round()
+    sim.run_for(0.01)
+    clients[0].propose()
+    sim.run_to_quiescence()
+    assert coord.chosen_value == "value0"
+    oracle.assert_safe()
+
+
+def test_conflict_recovery():
+    """Two clients race: either one wins unanimously or the coordinator
+    recovers in a higher round; never two values."""
+    sim, oracle, coord, _, clients = build_fast(seed=1, n_clients=2)
+    coord.start_round()
+    sim.run_for(0.01)
+    for c in clients:
+        c.propose()
+    sim.run_for(5.0)
+    oracle.assert_safe()
+    assert coord.chosen_value in ("value0", "value1")
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_clients=st.integers(1, 3),
+    drop=st.sampled_from([0.0, 0.1]),
+)
+def test_fast_paxos_safety_property(seed, n_clients, drop):
+    sim, oracle, coord, _, clients = build_fast(
+        seed=seed, n_clients=n_clients, drop=drop
+    )
+    coord.start_round()
+    for i, c in enumerate(clients):
+        sim.call_at(0.002 * i, c.propose)
+    sim.run_for(10.0)
+    oracle.assert_safe()
+    chosen = {repr(r.value) for r in oracle.chosen.values()}
+    assert len(chosen) <= 1
+
+
+def test_f_plus_1_acceptor_count():
+    """The Section 7 headline: the deployment really has only f+1 acceptors."""
+    for f in (1, 2, 3):
+        sim, oracle, coord, accs, clients = build_fast(seed=f, f=f)
+        assert len(accs) == f + 1
+        coord.start_round()
+        sim.run_for(0.01)
+        clients[0].propose()
+        sim.run_to_quiescence()
+        assert coord.chosen_value == "value0"
+        oracle.assert_safe()

@@ -1,0 +1,137 @@
+"""Algorithm 1 / Algorithm 4 unit tests, including the Figure 3 trace."""
+
+from repro.core import messages as m
+from repro.core.matchmaker import Matchmaker
+from repro.core.quorums import Configuration
+from repro.core.rounds import NEG_INF, Round
+from repro.core.sim import Simulator
+
+
+def mk():
+    sim = Simulator(seed=0)
+    mm = Matchmaker("mm0")
+    sent = []
+
+    class Probe:
+        addr = "probe"
+        failed = False
+
+        def on_message(self, src, msg):
+            sent.append(msg)
+
+        def on_start(self):
+            pass
+
+    sim.register(mm)
+    sim.register(Probe())
+    return sim, mm, sent
+
+
+def C(i):
+    return Configuration.majority(i, [f"a{i}_{k}" for k in range(3)])
+
+
+def deliver(sim, mm, msg):
+    mm.on_message("probe", msg)
+    sim.run_to_quiescence()
+
+
+def test_figure_3_trace():
+    """(a)-(d) of Figure 3, plus the final ignored MatchA(1, C1)."""
+    sim, mm, sent = mk()
+
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 0), config=C(0)))
+    assert isinstance(sent[-1], m.MatchB)
+    assert sent[-1].history == ()
+
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 2), config=C(2)))
+    assert [j.s for j, _ in sent[-1].history] == [0]
+
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 3), config=C(3)))
+    assert [j.s for j, _ in sent[-1].history] == [0, 2]
+
+    n = len(sent)
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 1), config=C(1)))
+    # Algorithm 1 line 3: the stale MatchA is ignored (we nack for liveness).
+    assert isinstance(sent[-1], m.MatchNack) and len(sent) == n + 1
+    assert Round(0, 0, 1) not in mm.log
+
+
+def test_idempotent_retransmission():
+    sim, mm, sent = mk()
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 0), config=C(0)))
+    first = sent[-1]
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 0), config=C(0)))
+    assert isinstance(sent[-1], m.MatchB)
+    assert sent[-1].history == first.history
+    assert mm.match_count == 1  # only counted once
+
+
+def test_gc_watermark():
+    # Algorithm 4.
+    sim, mm, sent = mk()
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 0), config=C(0)))
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 1), config=C(1)))
+    deliver(sim, mm, m.GarbageA(round=Round(0, 0, 1)))
+    assert isinstance(sent[-1], m.GarbageB)
+    assert Round(0, 0, 0) not in mm.log  # deleted
+    assert Round(0, 0, 1) in mm.log
+    # MatchA below the watermark is rejected.
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 0), config=C(9)))
+    assert isinstance(sent[-1], m.MatchNack)
+    # A later MatchA returns w in the MatchB and no GC'd entries.
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 5), config=C(5)))
+    assert isinstance(sent[-1], m.MatchB)
+    assert sent[-1].gc_watermark == Round(0, 0, 1)
+    assert [j.s for j, _ in sent[-1].history] == [1]
+
+
+def test_stop_freezes():
+    # Section 6.
+    sim, mm, sent = mk()
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 0), config=C(0)))
+    deliver(sim, mm, m.StopA())
+    assert isinstance(sent[-1], m.StopB)
+    assert [j.s for j, _ in sent[-1].log] == [0]
+    n = len(sent)
+    deliver(sim, mm, m.MatchA(round=Round(0, 0, 1), config=C(1)))
+    assert len(sent) == n  # stopped: no response at all
+
+
+def test_bootstrap_then_enable():
+    sim = Simulator(seed=0)
+    mm = Matchmaker("mmX", enabled=False)
+    sent = []
+
+    class Probe:
+        addr = "probe"
+        failed = False
+
+        def on_message(self, src, msg):
+            sent.append(msg)
+
+        def on_start(self):
+            pass
+
+    sim.register(mm)
+    sim.register(Probe())
+
+    log = ((Round(0, 0, 0), C(0)),)
+    mm.on_message("probe", m.MatchA(round=Round(0, 0, 1), config=C(1)))
+    sim.run_to_quiescence()
+    assert not sent  # not bootstrapped: silent
+
+    mm.on_message("probe", m.Bootstrap(log=log, gc_watermark=NEG_INF))
+    sim.run_to_quiescence()
+    assert isinstance(sent[-1], m.BootstrapAck)
+    assert mm.log == dict(log)
+
+    mm.on_message("probe", m.MatchA(round=Round(0, 0, 1), config=C(1)))
+    sim.run_to_quiescence()
+    assert not isinstance(sent[-1], m.MatchB)  # bootstrapped but not enabled
+
+    mm.on_message("probe", m.MMEnable())
+    mm.on_message("probe", m.MatchA(round=Round(0, 0, 1), config=C(1)))
+    sim.run_to_quiescence()
+    assert isinstance(sent[-1], m.MatchB)
+    assert [j.s for j, _ in sent[-1].history] == [0]

@@ -1,0 +1,79 @@
+"""Matchmaker reconfiguration (Section 6) integration tests."""
+
+from repro.core import build
+from repro.core.rounds import Round
+
+
+def test_matchmaker_reconfiguration_end_to_end():
+    d = build(f=1, n_clients=2, seed=0)
+    d.start_clients()
+    d.sim.run_for(0.1)
+    new_set = tuple(mm.addr for mm in d.standby_matchmakers)
+    d.sim.call_at(0.12, lambda: d.reconfigure_matchmakers(new_set))
+    d.sim.run_for(0.2)
+    # The coordinator finished and proposers now point at M_new.
+    assert d.mm_coordinator.phase == "idle"
+    assert d.mm_coordinator.stats.enabled_at > 0
+    assert tuple(d.leader.matchmakers) == d.mm_coordinator.m_new
+    # Old matchmakers are frozen; new ones carry the merged log.
+    assert all(mm.stopped for mm in d.matchmakers)
+    live = [mm for mm in d.standby_matchmakers if mm.addr in d.mm_coordinator.m_new]
+    assert all(mm.enabled for mm in live)
+    # An acceptor reconfiguration through the NEW matchmakers still works.
+    d.sim.call_at(d.sim.now + 0.01, d.reconfigure_random)
+    d.sim.run_for(0.2)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert any(mm.match_count > 0 for mm in live)
+    assert d.leader.status == "STEADY"
+
+
+def test_matchmaker_log_merge_figure_7():
+    """Figure 7: union of logs minus entries below the max watermark."""
+    d = build(f=1, n_clients=1, seed=1)
+    d.sim.run_for(0.05)
+    # Seed the three matchmakers with divergent logs + watermarks.
+    from repro.core.quorums import Configuration
+
+    c = lambda i: Configuration.majority(100 + i, [f"x{i}"])
+    r = lambda s: Round(5, 0, s)
+    mm0, mm1, mm2 = d.matchmakers
+    mm0.log[r(1)] = c(1)
+    mm1.log[r(2)] = c(2)
+    mm2.log[r(3)] = c(3)
+    mm1.gc_watermark = r(2)
+    new_set = tuple(mm.addr for mm in d.standby_matchmakers)
+    d.reconfigure_matchmakers(new_set)
+    d.sim.run_for(0.2)
+    assert d.mm_coordinator.phase == "idle"
+    merged = dict(d.mm_coordinator._merged_log)
+    # r(1) may appear only if the f+1 StopBs gathered didn't include mm1's
+    # watermark; with all three alive the coordinator uses the first f+1 =
+    # 2 responders.  Assert the invariant rather than the exact set:
+    w = d.mm_coordinator._merged_w
+    assert all(not (j < w) for j in merged)
+
+
+def test_concurrent_reconfigs_choose_single_set():
+    """Two coordinators racing must agree on one M_new (the Paxos choice)."""
+    from repro.core.mm_reconfig import MMReconfigCoordinator
+
+    d = build(f=1, n_clients=0, seed=2)
+    results = []
+    coord2 = MMReconfigCoordinator(
+        "mmcoord2", 98, f=1, on_complete=lambda s: results.append(("c2", s))
+    )
+    d.sim.register(coord2)
+    d.mm_coordinator.on_complete = lambda s: results.append(("c1", s))
+
+    set_a = tuple(mm.addr for mm in d.standby_matchmakers)
+    set_b = tuple(mm.addr for mm in d.standby_matchmakers[::-1])
+    old = tuple(mm.addr for mm in d.matchmakers)
+    d.sim.call_at(0.01, lambda: d.mm_coordinator.reconfigure(old, set_a))
+    d.sim.call_at(0.0101, lambda: coord2.reconfigure(old, set_b))
+    d.sim.run_for(1.0)
+    finished = [s for _, s in results]
+    assert finished, "at least one coordinator completes"
+    # Every completed coordinator adopted the SAME chosen set.
+    assert len({tuple(s) for s in finished}) == 1

@@ -1,0 +1,181 @@
+"""Matchmaker MultiPaxos end-to-end integration tests (Sections 4-6, 8)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import build
+from repro.core.proposer import Options
+from repro.core.replica import KVStoreSM
+from repro.core.sim import NetworkConfig
+
+
+def test_commands_chosen_and_executed():
+    d = build(f=1, n_clients=2, seed=0)
+    d.start_clients()
+    d.sim.run_for(0.5)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert len(d.oracle.chosen) > 100
+    assert all(len(c.latencies) > 10 for c in d.clients)
+
+
+def test_kv_state_machine_convergence():
+    d = build(f=1, n_clients=3, seed=1, sm_factory=KVStoreSM)
+    i = [0]
+
+    def op(_):
+        i[0] += 1
+        return ("set", f"k{i[0] % 5}", i[0])
+
+    for c in d.clients:
+        c.op_factory = op
+    d.start_clients()
+    d.sim.run_for(0.3)
+    d.stop_clients()
+    d.sim.run_for(0.2)
+    d.check_all()
+    stores = [r.sm.store for r in d.replicas]
+    # All replicas that executed the full prefix agree.
+    w = min(r.exec_watermark for r in d.replicas)
+    assert w > 0
+    assert stores[0] == stores[1] == stores[2]
+
+
+def test_reconfiguration_no_stalls_with_optimizations():
+    """Section 4.4: with Opts 1+2, no command is delayed by reconfiguration."""
+    d = build(f=1, n_clients=4, seed=2)
+    d.start_clients()
+    for k in range(10):
+        d.sim.call_at(0.05 + 0.02 * k, d.reconfigure_random)
+    d.sim.run_for(0.5)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert len(d.oracle.reconfig_durations) >= 10
+    assert d.leader.stall_count == 0  # the headline claim
+    # Reconfigurations completed in ~1 network RTT (simulated us scale).
+    assert max(d.oracle.reconfig_durations) < 0.01
+
+
+def test_reconfiguration_stalls_without_optimizations():
+    """Without Opt 1/2, commands arriving mid-reconfiguration stall."""
+    opts = Options(proactive_matchmaking=False, phase1_bypass=False)
+    # Fast client loop + slow network so requests land inside Phase 1.
+    net = NetworkConfig(base_latency=5e-3, jitter=1e-3)
+    d = build(f=1, n_clients=8, seed=3, options=opts, net=net)
+    d.start_clients()
+    for k in range(5):
+        d.sim.call_at(0.25 + 0.15 * k, d.reconfigure_random)
+    d.sim.run_for(1.2)
+    d.stop_clients()
+    d.sim.run_for(0.3)
+    d.check_all()
+    assert d.leader.stall_count > 0
+
+
+def test_matchmakers_return_single_config_steady_state():
+    """Section 8.1: GC is fast enough that matchmakers usually return
+    exactly one configuration."""
+    d = build(f=1, n_clients=2, seed=4)
+    d.start_clients()
+    for k in range(8):
+        d.sim.call_at(0.05 + 0.05 * k, d.reconfigure_random)
+    d.sim.run_for(0.6)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    sizes = d.oracle.matchmaking_history_sizes[1:]  # skip bootstrap
+    assert sizes and max(sizes) <= 2
+    assert sizes.count(1) >= len(sizes) - 1
+
+
+def test_gc_retires_old_configurations():
+    d = build(f=1, n_clients=1, seed=5)
+    d.start_clients()
+    d.sim.call_at(0.05, d.reconfigure_random)
+    d.sim.run_for(0.3)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert d.leader.retired_config_ids  # old config shut down
+    assert len(d.oracle.gc_durations) >= 1
+    # Section 8.1: old acceptors GC'd within five (simulated) milliseconds.
+    assert max(d.oracle.gc_durations) < 5e-3
+
+
+def test_leader_failover():
+    """Section 8.3: fail the leader; a new one takes over and recovers the
+    chosen prefix; no chosen command is lost."""
+    d = build(f=1, n_clients=2, seed=6)
+    for p in d.proposers:
+        p.opt.auto_election = True
+        p.opt.election_timeout = 0.05
+    d.proposers[1].start_election_watch(d.random_config)
+    d.start_clients()
+    d.sim.run_for(0.2)
+    chosen_before = dict(d.oracle.chosen)
+    d.sim.fail("p0")
+    d.sim.run_for(0.5)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert d.proposers[1].is_leader
+    # Progress resumed under the new leader.
+    assert len(d.oracle.chosen) > len(chosen_before)
+    # Old chosen values retained identically (prefix recovery).
+    for slot, rec in chosen_before.items():
+        assert repr(d.oracle.chosen[slot].value) == repr(rec.value)
+
+
+def test_simultaneous_leader_acceptor_matchmaker_failure():
+    """Section 8.3 / Figure 20."""
+    d = build(f=1, n_clients=2, seed=7)
+    for p in d.proposers:
+        p.opt.auto_election = True
+        p.opt.election_timeout = 0.05
+    d.proposers[1].start_election_watch(d.random_config)
+    d.start_clients()
+    d.sim.run_for(0.2)
+    d.sim.fail("p0")
+    d.sim.fail(d.leader.config.acceptors[0])
+    d.sim.fail("mm0")
+    d.sim.run_for(0.6)
+    n_mid = len(d.oracle.chosen)
+    d.sim.run_for(0.4)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert d.proposers[1].is_leader
+    assert len(d.oracle.chosen) > n_mid  # still making progress
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), drop=st.sampled_from([0.0, 0.02]))
+def test_property_reconfig_storm_safety(seed, drop):
+    """Safety holds across random reconfiguration storms + lossy networks."""
+    d = build(
+        f=1,
+        n_clients=2,
+        seed=seed,
+        net=NetworkConfig(drop_prob=drop),
+    )
+    d.start_clients()
+    for k in range(6):
+        d.sim.call_at(0.02 + 0.03 * k, d.reconfigure_random)
+    d.sim.run_for(0.4)
+    d.stop_clients()
+    d.sim.run_for(0.2)
+    d.check_all()
+
+
+def test_f2_deployment():
+    d = build(f=2, n_clients=2, seed=8)
+    d.start_clients()
+    d.sim.call_at(0.05, d.reconfigure_random)
+    d.sim.run_for(0.3)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert len(d.oracle.chosen) > 50

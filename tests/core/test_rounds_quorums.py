@@ -1,0 +1,92 @@
+"""Unit + property tests for rounds and Flexible Paxos configurations."""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quorums import Configuration, QuorumSpec
+from repro.core.rounds import NEG_INF, Round, initial_round, max_round
+
+
+class TestRounds:
+    def test_lexicographic_order(self):
+        # Section 3.4's example ordering.
+        assert Round(0, 0, 0) < Round(0, 0, 1) < Round(0, 1, 0) < Round(1, 0, 0)
+
+    def test_next_s_owned_by_same_proposer(self):
+        r = Round(3, 7, 1)
+        assert r.next_s() == Round(3, 7, 2)
+        assert r < r.next_s()
+
+    def test_next_r_is_larger_for_any_proposer(self):
+        r = Round(3, 7, 9)
+        for pid in range(5):
+            assert r < r.next_r(pid)
+
+    def test_neg_inf_below_everything(self):
+        assert NEG_INF < Round(0, 0, 0)
+        assert not (Round(0, 0, 0) < NEG_INF)
+        assert NEG_INF <= NEG_INF
+        assert max_round(NEG_INF, Round(1, 2, 3)) == Round(1, 2, 3)
+        assert max_round(Round(1, 2, 3), NEG_INF) == Round(1, 2, 3)
+
+    @given(
+        st.tuples(st.integers(0, 5), st.integers(0, 3), st.integers(0, 5)),
+        st.tuples(st.integers(0, 5), st.integers(0, 3), st.integers(0, 5)),
+    )
+    def test_total_order(self, a, b):
+        ra, rb = Round(*a), Round(*b)
+        assert (ra < rb) + (rb < ra) + (ra == rb) == 1
+
+    def test_initial_round(self):
+        assert initial_round(2) == Round(0, 2, 0)
+
+
+class TestQuorums:
+    def test_majority_intersection(self):
+        for n in (1, 3, 5, 7):
+            c = Configuration.majority(0, [f"a{i}" for i in range(n)])
+            assert c.validate_intersection()
+
+    def test_flexible_requires_intersection(self):
+        with pytest.raises(AssertionError):
+            Configuration.flexible(0, ["a", "b", "c", "d"], p1=2, p2=2)
+        c = Configuration.flexible(0, ["a", "b", "c", "d"], p1=3, p2=2)
+        assert c.validate_intersection()
+
+    def test_grid_intersection(self):
+        rows = [["a", "b", "c"], ["d", "e", "f"]]
+        c = Configuration.grid(0, rows)
+        assert c.validate_intersection()
+        assert c.phase1.is_quorum({"a", "b", "c"})
+        assert not c.phase1.is_quorum({"a", "b"})
+        assert c.phase2.is_quorum({"a", "d"})
+
+    def test_fast_f_plus_1(self):
+        # Section 7: singleton P1 quorums, unanimous P2 quorum.
+        c = Configuration.fast_f_plus_1(0, ["a", "b"])
+        assert c.validate_intersection()
+        assert c.phase1.is_quorum({"a"})
+        assert c.phase2.is_quorum({"a", "b"})
+        assert not c.phase2.is_quorum({"a"})
+
+    @given(st.integers(1, 9), st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_threshold_intersection_property(self, n, data):
+        """Any p1, p2 with p1 + p2 > n gives intersecting quorums."""
+        p1 = data.draw(st.integers(1, n))
+        p2 = data.draw(st.integers(max(1, n - p1 + 1), n))
+        acc = [f"a{i}" for i in range(n)]
+        c = Configuration.flexible(0, acc, p1=p1, p2=p2)
+        rng = random.Random(data.draw(st.integers(0, 1000)))
+        q1 = set(c.phase1.sample(rng))
+        q2 = set(c.phase2.sample(rng))
+        assert q1 & q2
+
+    def test_thrifty_sample_is_quorum(self):
+        c = Configuration.majority(0, ["a", "b", "c", "d", "e"])
+        rng = random.Random(0)
+        for _ in range(20):
+            assert c.phase2.is_quorum(c.phase2.sample(rng))

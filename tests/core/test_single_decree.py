@@ -1,0 +1,166 @@
+"""Single-decree Matchmaker Paxos: safety under adversarial networks.
+
+The hypothesis property tests explore seeds, drop probabilities, duplicate
+probabilities, proposer counts and configuration choices; the oracle raises
+on any execution that chooses two values (Section 3.3's theorem).
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import messages as m
+from repro.core.matchmaker import Matchmaker
+from repro.core.acceptor import Acceptor
+from repro.core.oracle import Oracle, SafetyViolation
+from repro.core.quorums import Configuration
+from repro.core.rounds import NEG_INF, Round
+from repro.core.sim import NetworkConfig, Simulator
+from repro.core.single import SingleDecreeProposer
+
+
+def build_single(
+    *,
+    seed: int,
+    n_proposers: int = 2,
+    f: int = 1,
+    drop: float = 0.0,
+    dup: float = 0.0,
+    pool: int = 9,
+    gc_enabled: bool = False,
+    round_pruning: bool = True,
+):
+    sim = Simulator(seed=seed, net=NetworkConfig(drop_prob=drop, dup_prob=dup))
+    oracle = Oracle()
+    mms = [Matchmaker(f"mm{i}") for i in range(2 * f + 1)]
+    accs = [Acceptor(f"a{i}") for i in range(pool)]
+    seq = [0]
+
+    def config_provider(attempt: int) -> Configuration:
+        seq[0] += 1
+        addrs = sim.rng.sample([a.addr for a in accs], 2 * f + 1)
+        return Configuration.majority(seq[0], sorted(addrs))
+
+    props = [
+        SingleDecreeProposer(
+            f"p{i}",
+            i,
+            matchmakers=tuple(mm.addr for mm in mms),
+            oracle=oracle,
+            config_provider=config_provider,
+            f=f,
+            gc_enabled=gc_enabled,
+            round_pruning=round_pruning,
+        )
+        for i in range(n_proposers)
+    ]
+    for n in [*mms, *accs, *props]:
+        sim.register(n)
+    return sim, oracle, props, mms, accs
+
+
+def test_single_value_chosen_clean_network():
+    sim, oracle, props, _, _ = build_single(seed=1, n_proposers=1)
+    props[0].propose("x")
+    sim.run_to_quiescence()
+    assert props[0].chosen_value == "x"
+    assert oracle.chosen[0].value == "x"
+
+
+def test_second_proposer_learns_first_value():
+    sim, oracle, props, _, _ = build_single(seed=2, n_proposers=2)
+    props[0].propose("x")
+    sim.run_to_quiescence()
+    props[1].propose("y")
+    sim.run_to_quiescence()
+    # P(i): no value other than x can be chosen in any round.
+    assert props[1].chosen_value == "x"
+    oracle.assert_safe()
+
+
+def test_matchmaking_returns_prior_configs():
+    sim, oracle, props, mms, _ = build_single(seed=3, n_proposers=2)
+    props[0].propose("x")
+    sim.run_to_quiescence()
+    props[1].propose("y")
+    sim.run_to_quiescence()
+    # The second proposer's matchmaking phase must have seen >= 1 config.
+    assert any(n >= 1 for n in oracle.matchmaking_history_sizes[1:])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    drop=st.sampled_from([0.0, 0.05, 0.2]),
+    dup=st.sampled_from([0.0, 0.1]),
+    n_proposers=st.integers(1, 3),
+)
+def test_safety_property_racing_proposers(seed, drop, dup, n_proposers):
+    """At most one value is ever chosen, whatever the network does."""
+    sim, oracle, props, _, _ = build_single(
+        seed=seed, n_proposers=n_proposers, drop=drop, dup=dup
+    )
+    for i, p in enumerate(props):
+        sim.call_at(i * 1e-4 * (seed % 3), lambda p=p, i=i: p.propose(f"v{i}"))
+    sim.run_to_quiescence(max_events=2_000_000)
+    oracle.assert_safe()  # raises on violation
+    chosen = {repr(r.value) for r in oracle.chosen.values()}
+    assert len(chosen) <= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_safety_with_gc_scenarios(seed):
+    """GC Scenarios 1/2 (Section 5.2) preserve safety under races."""
+    sim, oracle, props, _, _ = build_single(
+        seed=seed, n_proposers=3, drop=0.1, gc_enabled=True
+    )
+    for i, p in enumerate(props):
+        sim.call_at(i * 2e-4, lambda p=p, i=i: p.propose(f"v{i}"))
+    sim.run_to_quiescence(max_events=2_000_000)
+    oracle.assert_safe()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), pruning=st.booleans())
+def test_round_pruning_safe(seed, pruning):
+    """Optimization 4 must not affect safety."""
+    sim, oracle, props, _, _ = build_single(
+        seed=seed, n_proposers=2, drop=0.15, round_pruning=pruning
+    )
+    for i, p in enumerate(props):
+        p.propose(f"v{i}")
+    sim.run_to_quiescence(max_events=2_000_000)
+    oracle.assert_safe()
+
+
+def test_liveness_after_partition_heals():
+    sim, oracle, props, mms, accs = build_single(seed=7, n_proposers=1)
+    # Partition the proposer from everything, then heal.
+    sim.partition({"p0"}, {n.addr for n in [*mms, *accs]})
+    props[0].propose("x")
+    sim.run_for(0.2)
+    assert props[0].chosen_value is None
+    sim.heal_partitions()
+    sim.run_to_quiescence()
+    assert props[0].chosen_value == "x"
+
+
+def test_premature_gc_would_be_unsafe():
+    """The DPaxos lesson (Section 7): GC *without* the scenario checks lets a
+    later proposer miss a chosen value.  We force a premature GarbageA and
+    assert the oracle catches the resulting divergence — demonstrating the
+    bug class our Scenario 1-3 rules exclude."""
+    sim, oracle, props, mms, accs = build_single(seed=11, n_proposers=2)
+    p0, p1 = props
+    p0.propose("x")
+    sim.run_to_quiescence()
+    assert p0.chosen_value == "x"
+    # PREMATURE GC: wipe the matchmakers' memory of every round (no Scenario
+    # applies — nothing guarantees a later proposer learns about "x").
+    for mm in mms:
+        mm.log.clear()
+    p1.propose("y")
+    with pytest.raises(SafetyViolation):
+        sim.run_to_quiescence()
+        oracle.assert_safe()

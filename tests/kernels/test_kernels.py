@@ -1,0 +1,174 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.decode_attention import decode_attention_bkh
+from repro.kernels.ssd_scan import ssd_intra_chunk
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4), jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,H,K,Sq,Sk,hd,bq,bk",
+        [
+            (2, 4, 2, 256, 256, 64, 128, 128),
+            (1, 8, 8, 128, 128, 32, 64, 64),   # MHA
+            (1, 8, 2, 128, 256, 64, 128, 128), # cross-ish lengths
+            (2, 6, 2, 192, 192, 64, 64, 64),   # non-square blocks
+        ],
+    )
+    def test_matches_ref(self, dtype, B, H, K, Sq, Sk, hd, bq, bk):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = rand(ks[0], (B, H, Sq, hd), dtype)
+        k = rand(ks[1], (B, K, Sk, hd), dtype)
+        v = rand(ks[2], (B, K, Sk, hd), dtype)
+        scale = hd ** -0.5
+        out = flash_attention_bhsd(
+            q, k, v, scale=scale, causal=True, block_q=bq, block_k=bk
+        )
+        want = ref.flash_attention_ref(q, k, v, scale=scale, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+        )
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = rand(ks[0], (1, 4, 256, 64), jnp.float32)
+        k = rand(ks[1], (1, 2, 256, 64), jnp.float32)
+        v = rand(ks[2], (1, 2, 256, 64), jnp.float32)
+        out = flash_attention_bhsd(
+            q, k, v, scale=0.125, window=window, block_q=64, block_k=64
+        )
+        want = ref.flash_attention_ref(q, k, v, scale=0.125, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_softcap(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = rand(ks[0], (1, 2, 128, 64), jnp.float32) * 4
+        k = rand(ks[1], (1, 2, 128, 64), jnp.float32) * 4
+        v = rand(ks[2], (1, 2, 128, 64), jnp.float32)
+        out = flash_attention_bhsd(q, k, v, scale=0.125, softcap=20.0)
+        want = ref.flash_attention_ref(q, k, v, scale=0.125, softcap=20.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_non_causal(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = rand(ks[0], (1, 2, 128, 32), jnp.float32)
+        k = rand(ks[1], (1, 2, 128, 32), jnp.float32)
+        v = rand(ks[2], (1, 2, 128, 32), jnp.float32)
+        out = flash_attention_bhsd(q, k, v, scale=1.0, causal=False)
+        want = ref.flash_attention_ref(q, k, v, scale=1.0, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_ops_layout_wrapper(self):
+        """ops.flash_attention works in the model's (B,S,H,hd) layout."""
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        q = rand(ks[0], (2, 128, 4, 32), jnp.float32)
+        k = rand(ks[1], (2, 128, 2, 32), jnp.float32)
+        v = rand(ks[2], (2, 128, 2, 32), jnp.float32)
+        out = ops.flash_attention(q, k, v, scale=32 ** -0.5)
+        from repro.models.config import ModelConfig
+        from repro.models.layers import attention_naive
+
+        cfg = ModelConfig(
+            arch_id="t", family="dense", n_layers=1, d_model=128, vocab=16,
+            n_heads=4, n_kv_heads=2, head_dim=32, d_ff=64,
+        )
+        want = attention_naive(q, k, v, cfg=cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,H,K,S,hd,bk", [(2, 4, 2, 512, 64, 128), (4, 8, 8, 256, 32, 64), (1, 16, 2, 1024, 64, 256)]
+    )
+    def test_matches_ref(self, dtype, B, H, K, S, hd, bk):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = rand(ks[0], (B, H, hd), dtype)
+        kc = rand(ks[1], (B, K, S, hd), dtype)
+        vc = rand(ks[2], (B, K, S, hd), dtype)
+        lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+        out = decode_attention_bkh(q, kc, vc, lengths, scale=hd ** -0.5, block_k=bk)
+        want = ref.decode_attention_ref(q, kc, vc, lengths, scale=hd ** -0.5)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+        )
+
+    def test_windowed_reads(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        B, H, K, S, hd = 2, 4, 4, 512, 32
+        q = rand(ks[0], (B, H, hd), jnp.float32)
+        kc = rand(ks[1], (B, K, S, hd), jnp.float32)
+        vc = rand(ks[2], (B, K, S, hd), jnp.float32)
+        lengths = jnp.array([400, 512], jnp.int32)
+        out = decode_attention_bkh(
+            q, kc, vc, lengths, scale=hd ** -0.5, window=128, block_k=128
+        )
+        want = ref.decode_attention_ref(q, kc, vc, lengths, scale=hd ** -0.5, window=128)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_matches_model_decode_path(self):
+        """Kernel == models.layers.attention_decode on identical inputs."""
+        from repro.models.config import ModelConfig
+        from repro.models.layers import attention_decode
+
+        cfg = ModelConfig(
+            arch_id="t", family="dense", n_layers=1, d_model=128, vocab=16,
+            n_heads=4, n_kv_heads=2, head_dim=32, d_ff=64,
+        )
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        B, S = 2, 256
+        q = rand(ks[0], (B, 1, 4, 32), jnp.float32)
+        kc = rand(ks[1], (B, S, 2, 32), jnp.float32)
+        vc = rand(ks[2], (B, S, 2, 32), jnp.float32)
+        pos = jnp.array([100, 256], jnp.int32)
+        want = attention_decode(q, kc, vc, pos, cfg=cfg)
+        out = ops.decode_attention(q, kc, vc, pos, scale=32 ** -0.5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,nh,nC,Q,hd,N", [(2, 3, 4, 32, 16, 8), (1, 2, 2, 64, 64, 128)])
+    def test_intra_chunk_matches_ref(self, dtype, B, nh, nC, Q, hd, N):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = rand(ks[0], (B, nh, nC, Q, hd), dtype)
+        a = -jnp.abs(rand(ks[1], (B, nh, nC, Q), jnp.float32)) * 0.1
+        Bm = rand(ks[2], (B, nh, nC, Q, N), dtype) * 0.3
+        Cm = rand(ks[3], (B, nh, nC, Q, N), dtype) * 0.3
+        y, s, cum = ssd_intra_chunk(x, a, Bm, Cm)
+        yr, sr, cumr = ref.ssd_intra_chunk_ref(x, a, Bm, Cm)
+        tol = TOL[dtype]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **tol)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), **tol)
+        np.testing.assert_allclose(np.asarray(cum), np.asarray(cumr), rtol=1e-5, atol=1e-5)
+
+    def test_full_ssd_matches_model_oracle(self):
+        """ops.ssd (kernel + scan glue) == models.mamba2.ssd_chunked."""
+        from repro.models.mamba2 import ssd_chunked
+
+        B, S, nh, hd, N = 2, 128, 2, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        x = rand(ks[0], (B, S, nh, hd), jnp.float32)
+        a = -jnp.abs(rand(ks[1], (B, S, nh), jnp.float32)) * 0.1
+        Bm = rand(ks[2], (B, S, N), jnp.float32) * 0.3
+        Cm = rand(ks[3], (B, S, N), jnp.float32) * 0.3
+        y, h = ops.ssd(x, a, Bm, Cm, chunk=32)
+        yw, hw = ssd_chunked(x, a, Bm, Cm, chunk=32)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yw), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hw), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,115 @@
+"""Dry-run machinery smoke test: one real (reduced-ish) cell compiled on a
+512-device mesh in a subprocess (XLA_FLAGS isolation), plus unit tests of
+the spec builders that run in-process."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, cells, get_config, runnable_cells, shape_applicable
+from repro.models.config import ModelConfig
+from repro.models.sharding import batch_spec, param_specs, policy_for
+
+
+class TestCellEnumeration:
+    def test_40_cells(self):
+        assert len(cells()) == 40
+
+    def test_long_500k_skips(self):
+        skipped = [
+            (a, s)
+            for a, s in cells()
+            if not shape_applicable(get_config(a), s)[0]
+        ]
+        # exactly the pure full-attention archs skip long_500k
+        assert {(a, s.split("_")[0]) for a, s in skipped} == {
+            ("grok_1_314b", "long"),
+            ("llama4_scout_17b_a16e", "long"),
+            ("stablelm_12b", "long"),
+            ("starcoder2_15b", "long"),
+            ("seamless_m4t_large_v2", "long"),
+            ("chameleon_34b", "long"),
+        }
+        assert len(runnable_cells()) == 34
+
+    def test_policies(self):
+        assert policy_for(get_config("stablelm_12b"), "train") == "fsdp"
+        assert policy_for(get_config("grok_1_314b"), "train") == "tp"
+        assert policy_for(get_config("mamba2_2p7b"), "train") == "tp"
+        for a in ("stablelm_12b", "grok_1_314b"):
+            assert policy_for(get_config(a), "decode") == "tp"
+
+
+class TestSpecBuilders:
+    MAXES = {"pod": 2, "data": 16, "model": 16}
+
+    def test_batch_spec_divisibility(self):
+        cfg = get_config("stablelm_12b")
+        assert batch_spec(cfg, (256, 4096), self.MAXES, "tp") == P(("pod", "data"), None)
+        assert batch_spec(cfg, (1, 4096), self.MAXES, "tp") == P(None, None)
+        fs = batch_spec(cfg, (256, 4096), self.MAXES, "fsdp")
+        assert fs == P(("pod", "data"), "model")
+
+    def test_param_specs_tp_fallbacks(self):
+        import jax.numpy as jnp
+
+        cfg = get_config("grok_1_314b")
+        fake = {
+            "embed": jax.ShapeDtypeStruct((131072, 6144), jnp.float32),
+            "blocks": {
+                "attn": {"wk": jax.ShapeDtypeStruct((64, 6144, 8, 128), jnp.float32)},
+                "moe": {"w_in": jax.ShapeDtypeStruct((64, 8, 6144, 32768), jnp.float32)},
+            },
+        }
+        specs = param_specs(cfg, fake, self.MAXES, policy="tp")
+        # 8 KV heads don't divide model=16 -> replicated on 'model'
+        assert specs["blocks"]["attn"]["wk"] == P(None, "data", None, None)
+        # 8 experts don't divide model=16 -> TP-within-expert on F
+        assert specs["blocks"]["moe"]["w_in"] == P(None, None, "data", "model")
+        assert specs["embed"] == P("model", "data")
+
+    def test_param_specs_ep_when_divisible(self):
+        import jax.numpy as jnp
+
+        cfg = get_config("llama4_scout_17b_a16e")
+        fake = {"blocks": {"moe": {"w_in": jax.ShapeDtypeStruct((48, 16, 5120, 8192), jnp.float32)}}}
+        specs = param_specs(cfg, fake, self.MAXES, policy="tp")
+        assert specs["blocks"]["moe"]["w_in"] == P(None, "model", "data", None)
+
+    def test_param_specs_fsdp_flat(self):
+        import jax.numpy as jnp
+
+        cfg = get_config("stablelm_12b")
+        fake = {"blocks": {"mlp": {"w_in": jax.ShapeDtypeStruct((40, 5120, 13824), jnp.float32)}}}
+        specs = param_specs(cfg, fake, self.MAXES, policy="fsdp")
+        assert specs["blocks"]["mlp"]["w_in"] == P(None, ("pod", "data", "model"), None)
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_one_cell():
+    """Compile ONE real cell end-to-end (the smallest arch x cheapest
+    shape) on the 512-device mesh, and validate the artifact schema."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2_2p7b", "--shape", "decode_32k",
+         "--out", "/tmp/repro_dryrun_test"],
+        capture_output=True, text=True, timeout=500, env=env, cwd=root,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    path = "/tmp/repro_dryrun_test/mamba2_2p7b__decode_32k__16x16.json"
+    with open(path) as f:
+        art = json.load(f)
+    assert art["n_devices"] == 256
+    assert art["roofline"]["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert art["flops_per_device"] > 0
+    assert art["memory"]["peak_estimate"] > 0
+    assert 0 < art["roofline"]["roofline_fraction"] <= 1.0
