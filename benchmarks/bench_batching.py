@@ -1,0 +1,109 @@
+"""Hot-path batching: simulated commands/sec vs. batch size.
+
+The paper's Section 8 evaluation deploys Matchmaker MultiPaxos *with
+batching* on the command hot path.  This benchmark reproduces the shape
+of that win on the runtime layer's batching (runtime.BatchPolicy): one
+pipelined client (window of outstanding commands, the paper's many-
+outstanding-commands connection shape) drives the default f=1 deployment
+to steady state, with the simulator's per-message sender overhead
+modelling serialization/syscall cost; we sweep ``Options.batch_max``.
+
+Acceptance anchor: batch size 16 must be >= 2x batch size 1.
+
+Emits ``BENCH_batching.json`` (the throughput curve) next to the CSV row
+per batch size.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.core import ClusterSpec, NetworkConfig, PipelinedClient, Simulator
+from repro.core.deploy import Deployment
+from repro.core.proposer import Options
+
+from . import common
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+WINDOW = 64
+PER_MSG_OVERHEAD = 20e-6  # sender-side serialization cost per wire message
+FLUSH_INTERVAL = 600e-6
+
+
+def run_one(
+    batch_max: int,
+    *,
+    seed: int = 0,
+    duration: float = 0.4,
+    window: int = WINDOW,
+    overhead: float = PER_MSG_OVERHEAD,
+) -> Dict[str, float]:
+    opts = Options(batch_max=batch_max, batch_flush_interval=FLUSH_INTERVAL)
+    spec = ClusterSpec(f=1, n_clients=0, options=opts, auto_elect_leader=False)
+    sim = Simulator(seed=seed, net=NetworkConfig(per_msg_overhead=overhead))
+    dep = spec.instantiate(sim)
+    dep.proposers[0].become_leader(
+        dep.fresh_config([a.addr for a in dep.acceptors[:3]])
+    )
+    sim.run_for(0.01)
+
+    client = PipelinedClient("c0", lambda: dep.leader.addr, window=window)
+    sim.register(client)
+    client.start()
+    sim.run_for(duration)
+    client.stop()
+    sim.run_for(0.05)
+
+    dep.clients.append(client)
+    dep.check_all()  # oracle safety + replica agreement + at-most-once
+
+    lat = Deployment.summary([l for (_, l) in client.latencies])
+    return {
+        "batch_max": batch_max,
+        "commands_per_sec": client.completed / duration,
+        "completed": client.completed,
+        "wire_messages": sim.messages_sent,
+        "batches_sent": sum(
+            n.batches_sent for n in sim.nodes.values() if hasattr(n, "batches_sent")
+        ),
+        "median_latency_ms": lat["median"] * 1e3,
+        "iqr_latency_ms": lat["iqr"] * 1e3,
+    }
+
+
+def main(fast: bool = True) -> List[Dict[str, float]]:
+    duration = common.t(10.0) if not fast else 0.4
+    curve = []
+    for b in BATCH_SIZES:
+        row = run_one(b, duration=duration)
+        curve.append(row)
+        common.record("batching", **row)
+    base = curve[0]["commands_per_sec"]
+    for row in curve:
+        row["speedup_vs_unbatched"] = row["commands_per_sec"] / base if base else 0.0
+    out = os.environ.get("BENCH_BATCHING_JSON", "BENCH_batching.json")
+    with open(out, "w") as fh:
+        json.dump(
+            {
+                "workload": {
+                    "clients": 1,
+                    "window": WINDOW,
+                    "per_msg_overhead_s": PER_MSG_OVERHEAD,
+                    "flush_interval_s": FLUSH_INTERVAL,
+                    "duration_s": duration,
+                },
+                "curve": curve,
+            },
+            fh,
+            indent=2,
+        )
+    return curve
+
+
+if __name__ == "__main__":
+    curve = main()
+    common.emit_csv()
+    b16 = next(r for r in curve if r["batch_max"] == 16)
+    print(f"\nbatch=16 speedup vs batch=1: {b16['speedup_vs_unbatched']:.2f}x")

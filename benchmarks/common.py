@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import json
 import os
-import statistics
 import sys
 import time
 from typing import Any, Dict, List, Optional, Sequence
@@ -52,20 +51,11 @@ def _fmt(v: Any) -> str:
 
 
 def summary(xs: Sequence[float]) -> Dict[str, float]:
-    if not xs:
-        return {"median": 0.0, "iqr": 0.0, "stdev": 0.0, "n": 0}
-    xs = sorted(xs)
-    if len(xs) >= 4:
-        q = statistics.quantiles(xs, n=4)
-        iqr = q[2] - q[0]
-    else:
-        iqr = xs[-1] - xs[0]
-    return {
-        "median": statistics.median(xs),
-        "iqr": iqr,
-        "stdev": statistics.pstdev(xs) if len(xs) > 1 else 0.0,
-        "n": len(xs),
-    }
+    """Median / IQR / stdev of a sample — one implementation for both the
+    benchmark CSVs and the paper-table stats (Deployment.summary)."""
+    from repro.core.deploy import Deployment
+
+    return Deployment.summary(xs)
 
 
 class StopWatch:

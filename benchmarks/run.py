@@ -25,6 +25,7 @@ def main() -> None:
     # import AFTER the env var so common.SCALE picks it up
     from benchmarks import (
         bench_ablation,
+        bench_batching,
         bench_elastic,
         bench_fast_paxos,
         bench_horizontal,
@@ -44,6 +45,7 @@ def main() -> None:
         ("fig21/table2 matchmaker reconfig", bench_matchmaker_reconfig.main),
         ("sec7 fast paxos", bench_fast_paxos.main),
         ("fig14 thriftiness", bench_thriftiness.main),
+        ("sec8 hot-path batching", bench_batching.main),
         ("elastic control plane", bench_elastic.main),
         ("roofline table", bench_roofline.main),
     ]

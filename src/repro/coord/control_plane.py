@@ -32,7 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import messages as m
 from repro.core.acceptor import Acceptor
-from repro.core.deploy import Deployment, build
+from repro.core.deploy import ClusterSpec, Deployment
 from repro.core.oracle import Oracle
 from repro.core.proposer import Options, Proposer
 from repro.core.quorums import Configuration
@@ -130,18 +130,22 @@ class ClusterController:
         f: int = 1,
         seed: int = 0,
         net: Optional[NetworkConfig] = None,
+        options: Optional[Options] = None,
     ):
         self.f = f
-        self.dep: Deployment = build(
+        # The ledger cluster is described declaratively and instantiated on
+        # the deterministic simulator transport; a real deployment hands
+        # the same spec an AsyncTransport (or a future TCP transport).
+        self.spec = ClusterSpec(
             f=f,
             n_clients=0,
-            seed=seed,
-            net=net,
+            options=options,
             sm_factory=LedgerSM,
             acceptor_pool=0,
             auto_elect_leader=False,
         )
-        self.sim = self.dep.sim
+        self.sim = Simulator(seed=seed, net=net)
+        self.dep: Deployment = self.spec.instantiate(self.sim)
         self.pods: Dict[str, PodInfo] = {}
         self._acc_seq = itertools.count()
         self._cmd_seq = itertools.count(1)
@@ -160,9 +164,13 @@ class ClusterController:
     def add_pod(self, name: str) -> PodInfo:
         if name in self.pods:
             return self.pods[name]
+        # Pod-hosted acceptors get the same hot-path batch policy as the
+        # spec-built roles, so consensus_options batching covers the
+        # acceptor->proposer Phase2B leg too.
+        batch = (self.spec.options or Options()).batch_policy()
         addrs = []
         for _ in range(2 * self.f + 1):
-            a = Acceptor(f"{name}/acc{next(self._acc_seq)}")
+            a = Acceptor(f"{name}/acc{next(self._acc_seq)}", batch=batch)
             self.sim.register(a)
             self.dep.acceptors.append(a)
             addrs.append(a.addr)

@@ -44,6 +44,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.coord.control_plane import ClusterController
+from repro.core.proposer import Options
 from repro.models.config import ModelConfig
 from repro.models.sharding import axis_sizes, batch_spec, named, param_specs
 from repro.train import OptConfig, TrainState, checkpoint, init_state, make_train_step
@@ -121,6 +122,9 @@ class ElasticConfig:
     checkpoint_every: int = 10
     commit_every: int = 5  # ledger StepRecord cadence
     devices_per_pod: Optional[int] = None
+    # Consensus knobs forwarded to the control plane's ClusterSpec
+    # (e.g. Options(batch_max=16) to batch the ledger hot path).
+    consensus_options: Optional[Options] = None
 
 
 class ElasticTrainer:
@@ -137,7 +141,9 @@ class ElasticTrainer:
         self.cfg, self.ocfg, self.dcfg = cfg, ocfg, dcfg
         self.ecfg = ecfg or ElasticConfig()
         self.pipeline = TokenPipeline(dcfg)
-        self.controller = ClusterController(pods, seed=seed)
+        self.controller = ClusterController(
+            pods, seed=seed, options=self.ecfg.consensus_options
+        )
         self.step_fn = make_train_step(cfg, ocfg)
         self._jitted: Dict[Tuple[int, int], Any] = {}
 

@@ -1,25 +1,41 @@
 # The paper's primary contribution: Matchmaker Paxos / Matchmaker MultiPaxos
 # as a deterministic, event-simulated, fully tested protocol implementation.
+# Protocol logic lives in pure-kernel role classes (runtime.ProtocolNode);
+# I/O is an exchangeable Transport (sim.Simulator / net.AsyncTransport).
 from .acceptor import Acceptor
-from .client import Client
-from .deploy import Deployment, build
+from .client import Client, PipelinedClient
+from .deploy import ClusterSpec, Deployment, build
 from .fast_paxos import FastAcceptor, FastClient, FastCoordinator
 from .horizontal import ConfigChange, HorizontalProposer
 from .matchmaker import Matchmaker
 from .mm_reconfig import MMReconfigCoordinator
+from .net import AsyncTransport
 from .oracle import Oracle, SafetyViolation
 from .proposer import Options, Proposer
 from .quorums import Configuration, QuorumSpec
 from .replica import KVStoreSM, NoopSM, Replica, StateMachine
 from .rounds import NEG_INF, Round, initial_round, max_round
+from .runtime import (
+    BatchPolicy,
+    Broadcast,
+    CancelTimer,
+    ProtocolNode,
+    Send,
+    SetTimer,
+    Transport,
+    on,
+)
 from .sim import NetworkConfig, Node, Simulator
 from .single import SingleDecreeProposer
 
 __all__ = [
-    "Acceptor", "Client", "Deployment", "build", "ConfigChange", "Configuration", "FastAcceptor",
-    "FastClient", "FastCoordinator", "HorizontalProposer", "KVStoreSM",
-    "Matchmaker", "MMReconfigCoordinator", "NEG_INF", "NetworkConfig", "Node",
-    "NoopSM", "Options", "Oracle", "Proposer", "QuorumSpec", "Replica",
-    "Round", "SafetyViolation", "Simulator", "SingleDecreeProposer",
-    "StateMachine", "initial_round", "max_round",
+    "Acceptor", "AsyncTransport", "BatchPolicy", "Broadcast", "CancelTimer",
+    "Client", "ClusterSpec", "ConfigChange", "Configuration", "Deployment",
+    "FastAcceptor", "FastClient", "FastCoordinator", "HorizontalProposer",
+    "KVStoreSM", "MMReconfigCoordinator", "Matchmaker", "NEG_INF",
+    "NetworkConfig", "Node", "NoopSM", "Options", "Oracle", "PipelinedClient",
+    "ProtocolNode", "Proposer", "QuorumSpec", "Replica", "Round",
+    "SafetyViolation", "Send", "SetTimer", "Simulator",
+    "SingleDecreeProposer", "StateMachine", "Transport", "build",
+    "initial_round", "max_round", "on",
 ]

@@ -14,16 +14,17 @@ the prefix from the replicas instead of re-proposing it.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from . import messages as m
 from .rounds import NEG_INF, Round
+from .runtime import BatchPolicy, on
 from .sim import Address, Node
 
 
 class Acceptor(Node):
-    def __init__(self, addr: Address):
-        super().__init__(addr)
+    def __init__(self, addr: Address, *, batch: Optional[BatchPolicy] = None):
+        super().__init__(addr, batch=batch)
         self.round: Any = NEG_INF  # largest seen round r
         self.votes: Dict[int, Tuple[Any, Any]] = {}  # slot -> (vr, vv)
         self.chosen_watermark: int = 0  # Scenario 3 (Section 5.2)
@@ -31,21 +32,20 @@ class Acceptor(Node):
         self.phase1_count = 0
         self.phase2_count = 0
 
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.Phase1A):
-            self._on_phase1a(src, msg)
-        elif isinstance(msg, m.Phase2A):
-            self._on_phase2a(src, msg)
-        elif isinstance(msg, m.StoredWatermark):
-            if msg.round >= self.round:
-                self.chosen_watermark = max(self.chosen_watermark, msg.watermark)
-                self.send(
-                    src,
-                    m.StoredWatermarkAck(round=msg.round, watermark=self.chosen_watermark),
-                )
-        elif isinstance(msg, m.Ping):
-            self.send(src, m.Pong(msg.nonce))
+    @on(m.StoredWatermark)
+    def _on_stored_watermark(self, src: Address, msg: m.StoredWatermark) -> None:
+        if msg.round >= self.round:
+            self.chosen_watermark = max(self.chosen_watermark, msg.watermark)
+            self.send(
+                src,
+                m.StoredWatermarkAck(round=msg.round, watermark=self.chosen_watermark),
+            )
 
+    @on(m.Ping)
+    def _on_ping(self, src: Address, msg: m.Ping) -> None:
+        self.send(src, m.Pong(msg.nonce))
+
+    @on(m.Phase1A)
     def _on_phase1a(self, src: Address, msg: m.Phase1A) -> None:
         i = msg.round
         # "upon receiving Phase1A(i) from p with i > r" — re-promising the
@@ -65,6 +65,7 @@ class Acceptor(Node):
             m.Phase1B(round=i, votes=votes, chosen_watermark=self.chosen_watermark),
         )
 
+    @on(m.Phase2A)
     def _on_phase2a(self, src: Address, msg: m.Phase2A) -> None:
         i = msg.round
         # "upon receiving Phase2A(i, x) from p with i >= r"

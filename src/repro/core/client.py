@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Tuple
 
 from . import messages as m
+from .runtime import on
 from .sim import Address, Node
 
 
@@ -23,16 +24,19 @@ class Client(Node):
         op_factory=lambda n: b"\x00",  # the paper's one-byte no-op payload
         retry_timeout: float = 0.5,
         think_time: float = 0.0,
+        max_commands: Optional[int] = None,
     ):
         super().__init__(addr)
         self.leader_provider = leader_provider  # () -> leader address
         self.op_factory = op_factory
         self.retry_timeout = retry_timeout
         self.think_time = think_time
+        self.max_commands = max_commands  # stop after this many completions
         self.seq = 0
         self.inflight: Optional[m.Command] = None
         self.sent_at = 0.0
         self.running = False
+        self.done = False  # max_commands reached
         self._retry_timer = None
         # telemetry
         self.latencies: List[Tuple[float, float]] = []  # (completion time, latency)
@@ -50,6 +54,10 @@ class Client(Node):
     def _propose_next(self) -> None:
         if not self.running or self.failed:
             return
+        if self.max_commands is not None and self.seq >= self.max_commands:
+            self.done = True
+            self.stop()
+            return
         self.seq += 1
         cmd = m.Command(cmd_id=(self.addr, self.seq), op=self.op_factory(self.seq))
         self.inflight = cmd
@@ -66,17 +74,100 @@ class Client(Node):
             self._retry_timer.cancel()
         self._retry_timer = self.set_timer(self.retry_timeout, self._send_current)
 
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.ClientReply):
-            self.replies_by_cmd.setdefault(msg.cmd_id, []).append(msg)
-            if self.inflight is not None and msg.cmd_id == self.inflight.cmd_id:
-                self.latencies.append((self.now, self.now - self.sent_at))
-                self.inflight = None
-                if self._retry_timer is not None:
-                    self._retry_timer.cancel()
-                if self.think_time > 0:
-                    self.set_timer(self.think_time, self._propose_next)
-                else:
-                    self._propose_next()
-        elif isinstance(msg, m.LeaderHint):
-            self._send_current()
+    @on(m.ClientReply)
+    def _on_reply(self, src: Address, msg: m.ClientReply) -> None:
+        self.replies_by_cmd.setdefault(msg.cmd_id, []).append(msg)
+        if self.inflight is not None and msg.cmd_id == self.inflight.cmd_id:
+            self.latencies.append((self.now, self.now - self.sent_at))
+            self.inflight = None
+            if self._retry_timer is not None:
+                self._retry_timer.cancel()
+            if self.think_time > 0:
+                self.set_timer(self.think_time, self._propose_next)
+            else:
+                self._propose_next()
+
+    @on(m.LeaderHint)
+    def _on_leader_hint(self, src: Address, msg: m.LeaderHint) -> None:
+        self._send_current()
+
+
+class PipelinedClient(Node):
+    """An open-window client: keeps up to ``window`` commands in flight.
+
+    This is the workload shape of the paper's batched Section 8 deployment
+    (many outstanding commands per connection); with ``window=1`` it
+    degenerates to the closed-loop :class:`Client`.  Used by
+    ``benchmarks/bench_batching.py`` to expose the hot-path batching win.
+    """
+
+    def __init__(
+        self,
+        addr: Address,
+        leader_provider,
+        *,
+        window: int = 16,
+        op_factory=lambda n: b"\x00",
+        retry_timeout: float = 0.5,
+    ):
+        super().__init__(addr)
+        self.leader_provider = leader_provider
+        self.window = window
+        self.op_factory = op_factory
+        self.retry_timeout = retry_timeout
+        self.seq = 0
+        self.running = False
+        self.inflight: Dict[Tuple[str, int], Tuple[m.Command, float]] = {}
+        self._retry_timer = None
+        # telemetry
+        self.completed = 0
+        self.latencies: List[Tuple[float, float]] = []
+        self.replies_by_cmd: Dict[Tuple[str, int], List[m.ClientReply]] = {}
+
+    def start(self) -> None:
+        self.running = True
+        self._fill_window()
+        self._arm_retry()
+
+    def stop(self) -> None:
+        self.running = False
+        if self._retry_timer is not None:
+            self._retry_timer.cancel()
+
+    def _fill_window(self) -> None:
+        leader = self.leader_provider()
+        while self.running and len(self.inflight) < self.window:
+            self.seq += 1
+            cmd = m.Command(cmd_id=(self.addr, self.seq), op=self.op_factory(self.seq))
+            self.inflight[cmd.cmd_id] = (cmd, self.now)
+            if leader is not None:
+                self.send(leader, m.ClientRequest(command=cmd))
+
+    def _arm_retry(self) -> None:
+        def fire() -> None:
+            if not self.running:
+                return
+            leader = self.leader_provider()
+            cutoff = self.now - self.retry_timeout
+            if leader is not None:
+                for cmd, sent_at in list(self.inflight.values()):
+                    if sent_at <= cutoff:
+                        self.send(leader, m.ClientRequest(command=cmd))
+            self._retry_timer = self.set_timer(self.retry_timeout, fire)
+
+        self._retry_timer = self.set_timer(self.retry_timeout, fire)
+
+    @on(m.ClientReply)
+    def _on_reply(self, src: Address, msg: m.ClientReply) -> None:
+        self.replies_by_cmd.setdefault(msg.cmd_id, []).append(msg)
+        entry = self.inflight.pop(msg.cmd_id, None)
+        if entry is None:
+            return
+        self.completed += 1
+        self.latencies.append((self.now, self.now - entry[1]))
+        if self.running:
+            self._fill_window()
+
+    @on(m.LeaderHint)
+    def _on_leader_hint(self, src: Address, msg: m.LeaderHint) -> None:
+        self._fill_window()

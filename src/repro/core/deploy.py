@@ -5,6 +5,11 @@ proposers, a pool of ``2 x (2f+1)`` acceptors (reconfigurations draw random
 ``2f+1``-subsets from the pool), ``2f+1`` matchmakers (plus a standby pool
 of ``2f+1`` more for matchmaker reconfigurations), and ``2f+1`` replicas.
 
+The topology is described by a :class:`ClusterSpec`; ``spec.instantiate``
+constructs the role nodes against *any* runtime transport (the
+deterministic ``Simulator`` or ``net.AsyncTransport``), and the module
+level ``build(...)`` keeps the historical one-call simulator entry point.
+
 Also computes the paper's reporting statistics: sliding-window median /
 IQR / stdev over latency and throughput samples (Tables 1 and 2).
 """
@@ -24,12 +29,16 @@ from .oracle import Oracle
 from .proposer import Options, Proposer
 from .quorums import Configuration
 from .replica import NoopSM, Replica, StateMachine
+from .runtime import Transport
 from .sim import NetworkConfig, Simulator
 
 
 @dataclass
 class Deployment:
-    sim: Simulator
+    # The runtime transport the nodes are registered on.  Named ``sim``
+    # for continuity with the benchmark / test corpus; for asyncio builds
+    # this holds an ``AsyncTransport`` (see the ``transport`` alias).
+    sim: Any
     oracle: Oracle
     f: int
     proposers: List[Proposer]
@@ -42,6 +51,10 @@ class Deployment:
     config_seq: int = 0
 
     # ------------------------------------------------------------------
+    @property
+    def transport(self) -> Transport:
+        return self.sim
+
     @property
     def leader(self) -> Proposer:
         for p in self.proposers:
@@ -109,10 +122,17 @@ class Deployment:
         if not xs:
             return {"median": 0.0, "iqr": 0.0, "stdev": 0.0, "n": 0}
         xs = sorted(xs)
-        q = statistics.quantiles(xs, n=4) if len(xs) >= 4 else [xs[0], xs[len(xs) // 2], xs[-1]]
+        # True interquartile spread (Q3 - Q1).  Below four samples the
+        # exclusive quartile estimate degenerates to the sample extremes,
+        # so report 0.0 — never max - min mislabeled as "iqr".
+        if len(xs) >= 4:
+            q = statistics.quantiles(xs, n=4)
+            iqr = q[2] - q[0]
+        else:
+            iqr = 0.0
         return {
             "median": statistics.median(xs),
-            "iqr": q[2] - q[0],
+            "iqr": iqr,
             "stdev": statistics.pstdev(xs) if len(xs) > 1 else 0.0,
             "n": len(xs),
         }
@@ -121,6 +141,132 @@ class Deployment:
         self.oracle.assert_safe()
         self.oracle.check_replicas(self.replicas)
         self.oracle.check_client_results(self.clients)
+
+
+@dataclass
+class ClusterSpec:
+    """Declarative description of a paper-topology cluster.
+
+    ``instantiate(transport)`` wires the role nodes onto any runtime
+    transport; the same spec builds a deterministic simulation or an
+    in-process asyncio deployment (``net.AsyncTransport``).  All knobs of
+    the historical ``build(...)`` entry point live here, plus the
+    client-shape knobs used by the batching benchmark.
+    """
+
+    f: int = 1
+    n_clients: int = 1
+    options: Optional[Options] = None
+    sm_factory: Callable[[], StateMachine] = NoopSM
+    acceptor_pool: Optional[int] = None
+    client_think_time: float = 0.0
+    client_max_commands: Optional[int] = None
+    auto_elect_leader: bool = True
+
+    # -- address plan ----------------------------------------------------
+    def matchmaker_addrs(self) -> Tuple[str, ...]:
+        return tuple(f"mm{i}" for i in range(2 * self.f + 1))
+
+    def standby_matchmaker_addrs(self) -> Tuple[str, ...]:
+        return tuple(f"mm{i}" for i in range(2 * self.f + 1, 2 * (2 * self.f + 1)))
+
+    def acceptor_addrs(self) -> Tuple[str, ...]:
+        n = self.acceptor_pool if self.acceptor_pool is not None else 2 * (2 * self.f + 1)
+        return tuple(f"a{i}" for i in range(n))
+
+    def replica_addrs(self) -> Tuple[str, ...]:
+        return tuple(f"r{i}" for i in range(2 * self.f + 1))
+
+    def proposer_addrs(self) -> Tuple[str, ...]:
+        return tuple(f"p{i}" for i in range(self.f + 1))
+
+    # -- construction ----------------------------------------------------
+    def instantiate(self, transport: Transport) -> Deployment:
+        """Construct and register every role node on ``transport``."""
+        f = self.f
+        oracle = Oracle()
+        opts = self.options or Options()
+        batch = opts.batch_policy()
+
+        mm_addrs = self.matchmaker_addrs()
+        standby_addrs = self.standby_matchmaker_addrs()
+        acc_addrs = self.acceptor_addrs()
+        rep_addrs = self.replica_addrs()
+        prop_addrs = self.proposer_addrs()
+
+        matchmakers = [Matchmaker(a) for a in mm_addrs]
+        standby = [Matchmaker(a, enabled=False) for a in standby_addrs]
+        acceptors = [Acceptor(a, batch=batch) for a in acc_addrs]
+        replicas = [
+            Replica(a, self.sm_factory, leader_addrs=prop_addrs, batch=batch)
+            for a in rep_addrs
+        ]
+        proposers = [
+            Proposer(
+                prop_addrs[i],
+                i,
+                matchmakers=mm_addrs,
+                replicas=rep_addrs,
+                proposers=prop_addrs,
+                oracle=oracle,
+                options=opts,
+                f=f,
+            )
+            for i in range(f + 1)
+        ]
+
+        def on_mm_complete(new_set: Tuple[str, ...]) -> None:
+            for p in proposers:
+                p.set_matchmakers(new_set)
+
+        mm_coord = MMReconfigCoordinator(
+            "mmcoord", 99, f=f, on_complete=on_mm_complete
+        )
+
+        def current_leader() -> Optional[str]:
+            for p in proposers:
+                if p.is_leader:
+                    return p.addr
+            # Fall back to whoever the proposers believe leads.
+            for p in proposers:
+                if p.leader_addr:
+                    return p.leader_addr
+            return prop_addrs[0]
+
+        clients = [
+            Client(
+                f"c{i}",
+                current_leader,
+                think_time=self.client_think_time,
+                max_commands=self.client_max_commands,
+            )
+            for i in range(self.n_clients)
+        ]
+
+        for node in [
+            *matchmakers, *standby, *acceptors, *replicas, *proposers, mm_coord, *clients
+        ]:
+            transport.register(node)
+
+        dep = Deployment(
+            sim=transport,
+            oracle=oracle,
+            f=f,
+            proposers=proposers,
+            acceptors=acceptors,
+            matchmakers=matchmakers,
+            standby_matchmakers=standby,
+            replicas=replicas,
+            clients=clients,
+            mm_coordinator=mm_coord,
+        )
+        if self.auto_elect_leader:
+            # Election only emits effects, so it is transport-agnostic;
+            # on AsyncTransport the effects replay when run() starts.
+            dep.proposers[0].become_leader(
+                dep.fresh_config([a.addr for a in dep.acceptors[: 2 * f + 1]])
+            )
+        return dep
 
 
 def build(
@@ -135,74 +281,19 @@ def build(
     client_think_time: float = 0.0,
     auto_elect_leader: bool = True,
 ) -> Deployment:
-    """Build the paper's deployment and elect proposer 0 the leader."""
-    sim = Simulator(seed=seed, net=net)
-    oracle = Oracle()
-    n_acc_pool = acceptor_pool if acceptor_pool is not None else 2 * (2 * f + 1)
-
-    mm_addrs = tuple(f"mm{i}" for i in range(2 * f + 1))
-    standby_addrs = tuple(f"mm{i}" for i in range(2 * f + 1, 2 * (2 * f + 1)))
-    acc_addrs = tuple(f"a{i}" for i in range(n_acc_pool))
-    rep_addrs = tuple(f"r{i}" for i in range(2 * f + 1))
-    prop_addrs = tuple(f"p{i}" for i in range(f + 1))
-
-    matchmakers = [Matchmaker(a) for a in mm_addrs]
-    standby = [Matchmaker(a, enabled=False) for a in standby_addrs]
-    acceptors = [Acceptor(a) for a in acc_addrs]
-    replicas = [Replica(a, sm_factory, leader_addrs=prop_addrs) for a in rep_addrs]
-    proposers = [
-        Proposer(
-            prop_addrs[i],
-            i,
-            matchmakers=mm_addrs,
-            replicas=rep_addrs,
-            proposers=prop_addrs,
-            oracle=oracle,
-            options=options,
-            f=f,
-        )
-        for i in range(f + 1)
-    ]
-
-    def on_mm_complete(new_set: Tuple[str, ...]) -> None:
-        for p in proposers:
-            p.set_matchmakers(new_set)
-
-    mm_coord = MMReconfigCoordinator(
-        "mmcoord", 99, f=f, on_complete=on_mm_complete
-    )
-
-    def current_leader() -> Optional[str]:
-        for p in proposers:
-            if p.is_leader:
-                return p.addr
-        # Fall back to whoever the proposers believe leads.
-        for p in proposers:
-            if p.leader_addr:
-                return p.leader_addr
-        return prop_addrs[0]
-
-    clients = [
-        Client(f"c{i}", current_leader, think_time=client_think_time)
-        for i in range(n_clients)
-    ]
-
-    for node in [*matchmakers, *standby, *acceptors, *replicas, *proposers, mm_coord, *clients]:
-        sim.register(node)
-
-    dep = Deployment(
-        sim=sim,
-        oracle=oracle,
+    """Build the paper's deployment on the deterministic simulator and
+    elect proposer 0 the leader (the historical one-call entry point)."""
+    spec = ClusterSpec(
         f=f,
-        proposers=proposers,
-        acceptors=acceptors,
-        matchmakers=matchmakers,
-        standby_matchmakers=standby,
-        replicas=replicas,
-        clients=clients,
-        mm_coordinator=mm_coord,
+        n_clients=n_clients,
+        options=options,
+        sm_factory=sm_factory,
+        acceptor_pool=acceptor_pool,
+        client_think_time=client_think_time,
+        auto_elect_leader=auto_elect_leader,
     )
-    if auto_elect_leader:
-        proposers[0].become_leader(dep.fresh_config([a.addr for a in acceptors[: 2 * f + 1]]))
+    sim = Simulator(seed=seed, net=net)
+    dep = spec.instantiate(sim)  # elects proposer 0 unless disabled
+    if spec.auto_elect_leader:
         sim.run_for(0.01)  # let matchmaking + phase 1 settle
     return dep

@@ -23,6 +23,7 @@ from . import messages as m
 from .oracle import Oracle
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
+from .runtime import on
 from .sim import Address, Node
 
 SLOT = 0
@@ -41,42 +42,46 @@ class FastAcceptor(Node):
         self.any_round: Any = NEG_INF  # round in which "any" is active
         self.learners = learners
 
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.Phase1A):
-            if msg.round < self.round:
-                self.send(src, m.Phase1Nack(round=msg.round, witnessed=self.round))
-                return
-            self.round = msg.round
-            votes = ()
-            if self.vr != NEG_INF:
-                votes = (m.PhaseVote(slot=SLOT, vr=self.vr, vv=self.vv),)
-            self.send(src, m.Phase1B(round=msg.round, votes=votes))
-        elif isinstance(msg, m.Phase2A):
-            if msg.round < self.round:
-                self.send(
-                    src, m.Phase2Nack(round=msg.round, slot=SLOT, witnessed=self.round)
-                )
-                return
-            self.round = msg.round
-            if msg.value is m.ANY_VALUE or (
-                isinstance(msg.value, m.Command) and msg.value.cmd_id == m.ANY_VALUE.cmd_id
-            ):
-                # Enable the fast path for this round; do not vote yet.
-                self.any_round = max_round(self.any_round, msg.round)
-                # If a client value is already buffered, nothing to do: the
-                # fast path only applies to values arriving afterwards
-                # (buffering both ways is an optimization we skip).
-            else:
-                self._vote(msg.round, msg.value)
-        elif isinstance(msg, m.FastP2A):
-            # A client value for the fast path.  Vote iff round i is
-            # fast-enabled, we haven't voted in i yet, and i >= r.
-            i = self.any_round
-            if i == NEG_INF or i < self.round:
-                return
-            if self.vr == i:
-                return  # already voted in this round: first value wins
-            self._vote(i, msg.value)
+    @on(m.Phase1A)
+    def _on_phase1a(self, src: Address, msg: m.Phase1A) -> None:
+        if msg.round < self.round:
+            self.send(src, m.Phase1Nack(round=msg.round, witnessed=self.round))
+            return
+        self.round = msg.round
+        votes = ()
+        if self.vr != NEG_INF:
+            votes = (m.PhaseVote(slot=SLOT, vr=self.vr, vv=self.vv),)
+        self.send(src, m.Phase1B(round=msg.round, votes=votes))
+
+    @on(m.Phase2A)
+    def _on_phase2a(self, src: Address, msg: m.Phase2A) -> None:
+        if msg.round < self.round:
+            self.send(
+                src, m.Phase2Nack(round=msg.round, slot=SLOT, witnessed=self.round)
+            )
+            return
+        self.round = msg.round
+        if msg.value is m.ANY_VALUE or (
+            isinstance(msg.value, m.Command) and msg.value.cmd_id == m.ANY_VALUE.cmd_id
+        ):
+            # Enable the fast path for this round; do not vote yet.
+            self.any_round = max_round(self.any_round, msg.round)
+            # If a client value is already buffered, nothing to do: the
+            # fast path only applies to values arriving afterwards
+            # (buffering both ways is an optimization we skip).
+        else:
+            self._vote(msg.round, msg.value)
+
+    @on(m.FastP2A)
+    def _on_fast_p2a(self, src: Address, msg: m.FastP2A) -> None:
+        # A client value for the fast path.  Vote iff round i is
+        # fast-enabled, we haven't voted in i yet, and i >= r.
+        i = self.any_round
+        if i == NEG_INF or i < self.round:
+            return
+        if self.vr == i:
+            return  # already voted in this round: first value wins
+        self._vote(i, msg.value)
 
     def _vote(self, rnd: Round, value: Any) -> None:
         self.round = rnd
@@ -155,17 +160,12 @@ class FastCoordinator(Node):
             self.start_round()
 
     # ------------------------------------------------------------------
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.MatchB):
-            self._on_match_b(src, msg)
-        elif isinstance(msg, (m.MatchNack, m.Phase1Nack)):
-            if isinstance(msg.witnessed, Round):
-                self.max_witnessed = max_round(self.max_witnessed, msg.witnessed)
-        elif isinstance(msg, m.Phase1B):
-            self._on_phase1b(src, msg)
-        elif isinstance(msg, m.FastP2B):
-            self._on_fast_p2b(src, msg)
+    @on(m.MatchNack, m.Phase1Nack)
+    def _on_any_nack(self, src: Address, msg: Any) -> None:
+        if isinstance(msg.witnessed, Round):
+            self.max_witnessed = max_round(self.max_witnessed, msg.witnessed)
 
+    @on(m.MatchB)
     def _on_match_b(self, src: Address, msg: m.MatchB) -> None:
         if self._phase != "matchmaking" or msg.round != self.round:
             return
@@ -186,6 +186,7 @@ class FastCoordinator(Node):
         for c in self.history.values():
             self.broadcast(c.acceptors, m.Phase1A(round=self.round, from_slot=SLOT))
 
+    @on(m.Phase1B)
     def _on_phase1b(self, src: Address, msg: m.Phase1B) -> None:
         if self._phase != "phase1" or msg.round != self.round:
             return
@@ -218,6 +219,7 @@ class FastCoordinator(Node):
             m.Phase2A(round=self.round, slot=SLOT, value=proposal),
         )
 
+    @on(m.FastP2B)
     def _on_fast_p2b(self, src: Address, msg: m.FastP2B) -> None:
         votes = self._fast_votes.setdefault(msg.round, {})
         votes[src] = msg.value
@@ -248,6 +250,3 @@ class FastClient(Node):
     def propose(self) -> None:
         for a in self.acceptors:
             self.send(a, m.FastP2A(round=None, value=self.value))
-
-    def on_message(self, src: Address, msg: Any) -> None:
-        pass

@@ -25,6 +25,7 @@ from . import messages as m
 from .oracle import Oracle
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
+from .runtime import on
 from .sim import Address, Node
 
 
@@ -120,18 +121,13 @@ class HorizontalProposer(Node):
         self._propose_at(slot, ConfigChange(new_config))
 
     # ------------------------------------------------------------------
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.ClientRequest):
-            self._on_client_request(src, msg)
-        elif isinstance(msg, m.Phase1B):
-            self._on_phase1b(src, msg)
-        elif isinstance(msg, m.Phase2B):
-            self._on_phase2b(src, msg)
-        elif isinstance(msg, (m.Phase1Nack, m.Phase2Nack)):
-            pass  # single stable leader in the baseline benchmark
-        elif isinstance(msg, m.Chosen):
-            self._learn_chosen(msg.slot, msg.value, external=True)
+    # Phase1Nack / Phase2Nack are deliberately unhandled: single stable
+    # leader in the baseline benchmark.
+    @on(m.Chosen)
+    def _on_chosen(self, src: Address, msg: m.Chosen) -> None:
+        self._learn_chosen(msg.slot, msg.value, external=True)
 
+    @on(m.Phase1B)
     def _on_phase1b(self, src: Address, msg: m.Phase1B) -> None:
         if self._steady or msg.round != self.round:
             return
@@ -143,6 +139,7 @@ class HorizontalProposer(Node):
         self._steady = True
         self._flush_queued()
 
+    @on(m.ClientRequest)
     def _on_client_request(self, src: Address, msg: m.ClientRequest) -> None:
         if not self.is_leader or not self._steady:
             return
@@ -176,7 +173,7 @@ class HorizontalProposer(Node):
 
     def _send_phase2a(self, slot: int, *, thrifty: bool) -> None:
         st = self.slots[slot]
-        targets = st.config.phase2.sample(self.sim.rng) if thrifty else st.config.acceptors
+        targets = st.config.phase2.sample(self.rng) if thrifty else st.config.acceptors
         for a in targets:
             self.send(a, m.Phase2A(round=st.round, slot=slot, value=st.value))
 
@@ -187,6 +184,7 @@ class HorizontalProposer(Node):
 
         self.set_timer(self.retry_timeout, retry)
 
+    @on(m.Phase2B)
     def _on_phase2b(self, src: Address, msg: m.Phase2B) -> None:
         st = self.slots.get(msg.slot)
         if st is None or st.chosen or st.round != msg.round:

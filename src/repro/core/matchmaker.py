@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 from . import messages as m
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
+from .runtime import on
 from .sim import Address, Node
 
 
@@ -51,38 +52,31 @@ class Matchmaker(Node):
         items = sorted(self.log.items(), key=lambda jc: jc[0].key())
         return tuple(items)
 
+    def _live(self) -> bool:
+        """MatchA/GarbageA are only served by a live (un-stopped, enabled)
+        matchmaker; control traffic below bypasses this gate."""
+        return not self.stopped and self.enabled
+
     # -- message handling ----------------------------------------------------
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.StopA):
-            # Section 6: freeze.  StopA is answered even when already stopped
-            # (idempotent) so that f+1 StopB responses can always be gathered.
-            self.stopped = True
-            self.send(src, m.StopB(log=self.snapshot(), gc_watermark=self.gc_watermark))
-            return
-        if isinstance(msg, (m.MMP1A, m.MMP2A)):
-            # The matchmaker-set Paxos instance keeps running even when the
-            # matchmaker is stopped: choosing M_new is exactly what a stopped
-            # cohort is for.
-            self._on_mm_paxos(src, msg)
-            return
-        if isinstance(msg, m.Bootstrap):
-            self._on_bootstrap(src, msg)
-            return
-        if isinstance(msg, m.MMEnable):
-            # Only meaningful after Bootstrap; the coordinator sends MMEnable
-            # causally after our BootstrapAck, but the network may duplicate.
-            if self.bootstrapped:
-                self.enabled = True
-            return
-        if self.stopped or not self.enabled:
-            return
-        if isinstance(msg, m.MatchA):
-            self._on_match_a(src, msg)
-        elif isinstance(msg, m.GarbageA):
-            self._on_garbage_a(src, msg)
+    @on(m.StopA)
+    def _on_stop_a(self, src: Address, msg: m.StopA) -> None:
+        # Section 6: freeze.  StopA is answered even when already stopped
+        # (idempotent) so that f+1 StopB responses can always be gathered.
+        self.stopped = True
+        self.send(src, m.StopB(log=self.snapshot(), gc_watermark=self.gc_watermark))
+
+    @on(m.MMEnable)
+    def _on_mm_enable(self, src: Address, msg: m.MMEnable) -> None:
+        # Only meaningful after Bootstrap; the coordinator sends MMEnable
+        # causally after our BootstrapAck, but the network may duplicate.
+        if self.bootstrapped:
+            self.enabled = True
 
     # -- Algorithm 4 ---------------------------------------------------------
+    @on(m.MatchA)
     def _on_match_a(self, src: Address, msg: m.MatchA) -> None:
+        if not self._live():
+            return
         i, ci = msg.round, msg.config
         if i < self.gc_watermark:
             self.send(src, m.MatchNack(round=i, witnessed=self.gc_watermark))
@@ -108,7 +102,10 @@ class Matchmaker(Node):
         self.history_sizes.append(len(hist))
         self.send(src, m.MatchB(round=i, gc_watermark=self.gc_watermark, history=hist))
 
+    @on(m.GarbageA)
     def _on_garbage_a(self, src: Address, msg: m.GarbageA) -> None:
+        if not self._live():
+            return
         i = msg.round
         for j in [j for j in self.log if j < i]:
             del self.log[j]
@@ -116,6 +113,7 @@ class Matchmaker(Node):
         self.send(src, m.GarbageB(round=i))
 
     # -- Section 6: bootstrap ------------------------------------------------
+    @on(m.Bootstrap)
     def _on_bootstrap(self, src: Address, msg: m.Bootstrap) -> None:
         if not self.bootstrapped or self.stopped:
             # Fresh node, or a previously-stopped matchmaker being recycled
@@ -128,18 +126,22 @@ class Matchmaker(Node):
         self.send(src, m.BootstrapAck())
 
     # -- Section 6: Paxos acceptor for the next matchmaker set ---------------
-    def _on_mm_paxos(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.MMP1A):
-            if msg.ballot > self.mm_ballot:
-                self.mm_ballot = msg.ballot
-                self.send(src, m.MMP1B(ballot=msg.ballot, vb=self.mm_vb, vv=self.mm_vv))
-            else:
-                self.send(src, m.MMNack(ballot=self.mm_ballot))
-        elif isinstance(msg, m.MMP2A):
-            if msg.ballot >= self.mm_ballot:
-                self.mm_ballot = msg.ballot
-                self.mm_vb = msg.ballot
-                self.mm_vv = msg.value
-                self.send(src, m.MMP2B(ballot=msg.ballot))
-            else:
-                self.send(src, m.MMNack(ballot=self.mm_ballot))
+    # These run even when the matchmaker is stopped: choosing M_new is
+    # exactly what a stopped cohort is for.
+    @on(m.MMP1A)
+    def _on_mm_p1a(self, src: Address, msg: m.MMP1A) -> None:
+        if msg.ballot > self.mm_ballot:
+            self.mm_ballot = msg.ballot
+            self.send(src, m.MMP1B(ballot=msg.ballot, vb=self.mm_vb, vv=self.mm_vv))
+        else:
+            self.send(src, m.MMNack(ballot=self.mm_ballot))
+
+    @on(m.MMP2A)
+    def _on_mm_p2a(self, src: Address, msg: m.MMP2A) -> None:
+        if msg.ballot >= self.mm_ballot:
+            self.mm_ballot = msg.ballot
+            self.mm_vb = msg.ballot
+            self.mm_vv = msg.value
+            self.send(src, m.MMP2B(ballot=msg.ballot))
+        else:
+            self.send(src, m.MMNack(ballot=self.mm_ballot))

@@ -46,6 +46,21 @@ ANY_VALUE = Command(("<any>", -1), None)  # Fast Paxos "any" (Algorithm 5)
 
 
 # --------------------------------------------------------------------------
+# Transport-level batching (paper Section 8: batched deployment)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Batch:
+    """Hot-path messages to one destination coalesced into one wire
+    message.  Unwrapped by the kernel dispatch loop (runtime.ProtocolNode)
+    before handlers run, so batching never changes handler semantics."""
+
+    messages: Tuple[Any, ...]
+
+    def __repr__(self) -> str:
+        return f"Batch[{len(self.messages)}]"
+
+
+# --------------------------------------------------------------------------
 # Client <-> proposer / replica
 # --------------------------------------------------------------------------
 @dataclass(frozen=True)

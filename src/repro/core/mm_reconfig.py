@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 from . import messages as m
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
+from .runtime import on
 from .sim import Address, Node
 
 
@@ -91,19 +92,12 @@ class MMReconfigCoordinator(Node):
         self.set_timer(self.retry_timeout, fire)
 
     # ------------------------------------------------------------------
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.StopB):
-            self._on_stop_b(src, msg)
-        elif isinstance(msg, m.MMP1B):
-            self._on_mm_p1b(src, msg)
-        elif isinstance(msg, m.MMP2B):
-            self._on_mm_p2b(src, msg)
-        elif isinstance(msg, m.MMNack):
-            self.max_witnessed = max_round(self.max_witnessed, msg.ballot)
-        elif isinstance(msg, m.BootstrapAck):
-            self._on_bootstrap_ack(src)
+    @on(m.MMNack)
+    def _on_mm_nack(self, src: Address, msg: m.MMNack) -> None:
+        self.max_witnessed = max_round(self.max_witnessed, msg.ballot)
 
     # -- step 1/2: stop + merge -----------------------------------------
+    @on(m.StopB)
     def _on_stop_b(self, src: Address, msg: m.StopB) -> None:
         if self.phase != "stopping":
             return
@@ -144,6 +138,7 @@ class MMReconfigCoordinator(Node):
         self._p2_acks = set()
         self.broadcast(self.m_old, m.MMP1A(ballot=self.ballot))
 
+    @on(m.MMP1B)
     def _on_mm_p1b(self, src: Address, msg: m.MMP1B) -> None:
         if self.phase != "choosing" or msg.ballot != self.ballot:
             return
@@ -166,6 +161,7 @@ class MMReconfigCoordinator(Node):
             ),
         )
 
+    @on(m.MMP2B)
     def _on_mm_p2b(self, src: Address, msg: m.MMP2B) -> None:
         if self.phase != "proposing" or msg.ballot != self.ballot:
             return
@@ -183,7 +179,8 @@ class MMReconfigCoordinator(Node):
         self._arm_retry("bootstrapping", lambda: self.broadcast(self.m_new, boot))
 
     # -- step 5: enable ---------------------------------------------------
-    def _on_bootstrap_ack(self, src: Address) -> None:
+    @on(m.BootstrapAck)
+    def _on_bootstrap_ack(self, src: Address, msg: m.BootstrapAck) -> None:
         if self.phase != "bootstrapping":
             return
         self._boot_acks.add(src)

@@ -34,6 +34,7 @@ from . import messages as m
 from .oracle import Oracle
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
+from .runtime import BatchPolicy, on
 from .sim import Address, Node
 
 
@@ -48,6 +49,17 @@ class Options:
     heartbeat_interval: float = 0.1
     election_timeout: float = 1.0
     auto_election: bool = False
+    # Hot-path batching (Section 8 batched deployment): coalesce up to
+    # ``batch_max`` Phase2A/Phase2B/Chosen messages per destination,
+    # flushing partial buffers every ``batch_flush_interval`` seconds.
+    # batch_max=1 disables batching (the legacy byte-for-byte behaviour).
+    batch_max: int = 1
+    batch_flush_interval: float = 100e-6
+
+    def batch_policy(self) -> BatchPolicy:
+        return BatchPolicy(
+            max_batch=self.batch_max, flush_interval=self.batch_flush_interval
+        )
 
 
 @dataclass
@@ -100,13 +112,14 @@ class Proposer(Node):
         f: int = 1,
         mm_quorum_size: Optional[int] = None,  # Opt 6: default f+1
     ):
-        super().__init__(addr)
+        opts = options or Options()
+        super().__init__(addr, batch=opts.batch_policy())
         self.pid = proposer_id
         self.matchmakers = matchmakers
         self.replicas = replicas
         self.proposers = proposers
         self.oracle = oracle or Oracle()
-        self.opt = options or Options()
+        self.opt = opts
         self.f = f
         self.mm_quorum = mm_quorum_size or (f + 1)
 
@@ -218,43 +231,30 @@ class Proposer(Node):
         self.set_timer(self.opt.phase2_retry_timeout, resend)
 
     # ------------------------------------------------------------------
-    # Message dispatch
+    # Message handlers (typed dispatch; registry built by ProtocolNode)
     # ------------------------------------------------------------------
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.ClientRequest):
-            self._on_client_request(src, msg)
-        elif isinstance(msg, m.MatchB):
-            self._on_match_b(src, msg)
-        elif isinstance(msg, m.MatchNack):
-            self._on_nack(msg.witnessed)
-        elif isinstance(msg, m.Phase1B):
-            self._on_phase1b(src, msg)
-        elif isinstance(msg, m.Phase1Nack):
-            self._on_nack(msg.witnessed)
-        elif isinstance(msg, m.Phase2B):
-            self._on_phase2b(src, msg)
-        elif isinstance(msg, m.Phase2Nack):
-            self._on_phase2_nack(src, msg)
-        elif isinstance(msg, m.ReplicaAck):
-            self._on_replica_ack(src, msg)
-        elif isinstance(msg, m.RecoverB):
-            self._on_recover_b(src, msg)
-        elif isinstance(msg, m.GarbageB):
-            self._on_garbage_b(src, msg)
-        elif isinstance(msg, m.StoredWatermarkAck):
-            self._on_stored_ack(src, msg)
-        elif isinstance(msg, m.Heartbeat):
-            self.last_heartbeat = self.now
-            if msg.round is not None and (
-                self.round is None or msg.round >= self.round
-            ):
-                self.leader_addr = src
-        elif isinstance(msg, m.Chosen):
-            self._learn_chosen(msg.slot, msg.value, external=True)
+    @on(m.MatchNack)
+    def _on_match_nack(self, src: Address, msg: m.MatchNack) -> None:
+        self._on_nack(msg.witnessed)
+
+    @on(m.Phase1Nack)
+    def _on_phase1_nack(self, src: Address, msg: m.Phase1Nack) -> None:
+        self._on_nack(msg.witnessed)
+
+    @on(m.Heartbeat)
+    def _on_heartbeat(self, src: Address, msg: m.Heartbeat) -> None:
+        self.last_heartbeat = self.now
+        if msg.round is not None and (self.round is None or msg.round >= self.round):
+            self.leader_addr = src
+
+    @on(m.Chosen)
+    def _on_chosen(self, src: Address, msg: m.Chosen) -> None:
+        self._learn_chosen(msg.slot, msg.value, external=True)
 
     # ------------------------------------------------------------------
     # Client commands
     # ------------------------------------------------------------------
+    @on(m.ClientRequest)
     def _on_client_request(self, src: Address, msg: m.ClientRequest) -> None:
         if not self.is_leader:
             if self.leader_addr and self.leader_addr != self.addr:
@@ -297,7 +297,7 @@ class Proposer(Node):
     def _send_phase2a(self, slot: int, *, thrifty: bool) -> None:
         st = self.slots[slot]
         targets = (
-            st.config.phase2.sample(self.sim.rng) if thrifty else st.config.acceptors
+            st.config.phase2.sample(self.rng) if thrifty else st.config.acceptors
         )
         for a in targets:
             self.send(a, m.Phase2A(round=st.round, slot=slot, value=st.value))
@@ -314,6 +314,7 @@ class Proposer(Node):
     # ------------------------------------------------------------------
     # Matchmaking phase
     # ------------------------------------------------------------------
+    @on(m.MatchB)
     def _on_match_b(self, src: Address, msg: m.MatchB) -> None:
         ctx = self.match_ctx
         if ctx is None or ctx.done or msg.round != ctx.round:
@@ -372,6 +373,7 @@ class Proposer(Node):
     # ------------------------------------------------------------------
     # Phase 1
     # ------------------------------------------------------------------
+    @on(m.Phase1B)
     def _on_phase1b(self, src: Address, msg: m.Phase1B) -> None:
         p1 = self.p1_ctx
         if p1 is None or p1.done or msg.round != p1.round:
@@ -393,8 +395,6 @@ class Proposer(Node):
         if self.match_ctx is not None and not self.match_ctx.done:
             return  # Opt 5: matchmaking must finish before Phase 1 can end
         for cfg in p1.history.values():
-            if cfg.config_id == p1.config.config_id and cfg is p1.config:
-                pass
             acks = p1.acks.get(cfg.config_id, set())
             if not cfg.phase1.is_quorum(acks):
                 return
@@ -456,6 +456,7 @@ class Proposer(Node):
     # ------------------------------------------------------------------
     # Phase 2
     # ------------------------------------------------------------------
+    @on(m.Phase2B)
     def _on_phase2b(self, src: Address, msg: m.Phase2B) -> None:
         st = self.slots.get(msg.slot)
         if st is None or st.chosen or st.round != msg.round:
@@ -471,13 +472,18 @@ class Proposer(Node):
                 return
             st.chosen = True
             st.value = value
-        else:
+        elif self.config is not None:
             self.slots[slot] = SlotState(
                 value=value,
                 round=self.round or Round(0, self.pid, 0),
                 config=self.config,
                 chosen=True,
             )
+            self.next_slot = max(self.next_slot, slot + 1)
+        else:
+            # A Chosen arrived before our first round is active (e.g. a
+            # follower learning from the leader's broadcast): record the
+            # value but never fabricate a SlotState with config=None.
             self.next_slot = max(self.next_slot, slot + 1)
         self.chosen_values[slot] = value
         if not external:
@@ -487,6 +493,7 @@ class Proposer(Node):
             self.chosen_watermark += 1
         self._maybe_gc()
 
+    @on(m.Phase2Nack)
     def _on_phase2_nack(self, src: Address, msg: m.Phase2Nack) -> None:
         # A nack from our *own* newer round is a benign reconfiguration race
         # (Figure 6b): the slot will be re-proposed when Phase 1 finishes.
@@ -513,6 +520,7 @@ class Proposer(Node):
     # ------------------------------------------------------------------
     # Recovery (takeover)
     # ------------------------------------------------------------------
+    @on(m.RecoverB)
     def _on_recover_b(self, src: Address, msg: m.RecoverB) -> None:
         if self.recovered:
             return
@@ -539,6 +547,7 @@ class Proposer(Node):
     # ------------------------------------------------------------------
     # Replication watermark + garbage collection (Section 5)
     # ------------------------------------------------------------------
+    @on(m.ReplicaAck)
     def _on_replica_ack(self, src: Address, msg: m.ReplicaAck) -> None:
         self.replica_acks[src] = max(self.replica_acks.get(src, 0), msg.watermark)
         marks = sorted(self.replica_acks.values(), reverse=True)
@@ -586,10 +595,12 @@ class Proposer(Node):
         self.gc_acks[self.round] = set()
         self.broadcast(self.matchmakers, m.GarbageA(round=self.round))
 
-    def _on_stored_ack(self, src: Address, msg: Any) -> None:
+    @on(m.StoredWatermarkAck)
+    def _on_stored_ack(self, src: Address, msg: m.StoredWatermarkAck) -> None:
         self.stored_acks.setdefault(msg.round, set()).add(src)
         self._maybe_gc()
 
+    @on(m.GarbageB)
     def _on_garbage_b(self, src: Address, msg: m.GarbageB) -> None:
         acks = self.gc_acks.get(msg.round)
         if acks is None:

@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from . import messages as m
+from .runtime import BatchPolicy, on
 from .sim import Address, Node
 
 
@@ -55,8 +56,9 @@ class Replica(Node):
         sm_factory: Callable[[], StateMachine] = NoopSM,
         *,
         leader_addrs: Tuple[Address, ...] = (),
+        batch: Optional[BatchPolicy] = None,
     ):
-        super().__init__(addr)
+        super().__init__(addr, batch=batch)
         self.sm = sm_factory()
         self.log: Dict[int, Any] = {}  # slot -> chosen value
         self.exec_watermark = 0  # slots < this have been executed
@@ -65,13 +67,12 @@ class Replica(Node):
         # telemetry
         self.executions = 0
 
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.Chosen):
-            self._on_chosen(src, msg)
-        elif isinstance(msg, m.RecoverA):
-            entries = tuple(sorted(self.log.items()))
-            self.send(src, m.RecoverB(watermark=self.exec_watermark, entries=entries))
+    @on(m.RecoverA)
+    def _on_recover_a(self, src: Address, msg: m.RecoverA) -> None:
+        entries = tuple(sorted(self.log.items()))
+        self.send(src, m.RecoverB(watermark=self.exec_watermark, entries=entries))
 
+    @on(m.Chosen)
     def _on_chosen(self, src: Address, msg: m.Chosen) -> None:
         if msg.slot in self.log:
             assert _value_eq(self.log[msg.slot], msg.value), (

@@ -1,0 +1,317 @@
+"""The protocol kernel: typed dispatch, effects, transports, batching.
+
+This module is the narrow waist between *protocol logic* and *I/O*.  Every
+role in the reproduction (``Proposer``, ``Acceptor``, ``Matchmaker``,
+``Replica``, ``Client``, the single-decree and Fast Paxos variants, the
+horizontal baseline and the matchmaker-reconfiguration coordinator) is a
+``ProtocolNode``: a state machine whose handlers are registered with the
+typed ``@on(MessageType)`` decorator and whose only way of affecting the
+world is emitting :class:`Effect` objects through a :class:`Transport`.
+
+Two transports interpret the effects:
+
+  * ``sim.Simulator`` — the deterministic discrete-event network used by
+    every test, oracle check and paper-figure benchmark; and
+  * ``net.AsyncTransport`` — an in-process ``asyncio`` runtime that runs
+    the *same unmodified* role classes over real event-loop scheduling.
+
+Because protocol state machines never touch the event loop directly, a
+future TCP/UDP transport is a transport-only patch.
+
+Hot-path batching (the paper's Section 8 deployment batches commands) is
+implemented here once, below the role classes and above the transports:
+a ``BatchPolicy`` coalesces designated message types per destination into
+``messages.Batch`` envelopes, flushed on a max-batch or flush-interval
+trigger.  Receivers unwrap batches in the kernel dispatch loop, so every
+handler observes the exact same per-message semantics with or without
+batching (at-most-once is preserved under duplication and reordering).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    Optional,
+    Protocol,
+    Tuple,
+    Type,
+    runtime_checkable,
+)
+
+from . import messages as m
+
+Address = str
+
+
+# --------------------------------------------------------------------------
+# Effects
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Send:
+    """Deliver ``msg`` to ``dst`` (asynchronously, unreliably)."""
+
+    dst: Address
+    msg: Any
+
+
+@dataclass(frozen=True)
+class Broadcast:
+    """Deliver ``msg`` to every address in ``dsts`` (in order)."""
+
+    dsts: Tuple[Address, ...]
+    msg: Any
+
+
+@dataclass(frozen=True)
+class SetTimer:
+    """Invoke ``callback`` after ``delay`` seconds of transport time."""
+
+    delay: float
+    callback: Callable[[], None]
+
+
+@dataclass(frozen=True)
+class CancelTimer:
+    handle: Any
+
+
+Effect = Any  # Send | Broadcast | SetTimer | CancelTimer
+
+
+@runtime_checkable
+class TimerHandle(Protocol):
+    def cancel(self) -> None: ...
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """What a protocol node may observe of the outside world.
+
+    ``now`` is the transport's monotonic clock (simulated or wall);
+    ``rng`` is the transport's seeded randomness source (used e.g. by the
+    thriftiness optimization to sample Phase 2 quorums); ``perform``
+    interprets one effect on behalf of ``src`` and returns a
+    :class:`TimerHandle` for ``SetTimer`` effects.
+    """
+
+    rng: random.Random
+
+    @property
+    def now(self) -> float: ...
+
+    def register(self, node: "ProtocolNode") -> "ProtocolNode": ...
+
+    def perform(self, src: Address, effect: Effect) -> Optional[TimerHandle]: ...
+
+
+# --------------------------------------------------------------------------
+# Typed handler registry
+# --------------------------------------------------------------------------
+def on(*msg_types: Type[Any]) -> Callable:
+    """Register a method as the handler for one or more message types.
+
+    Usage::
+
+        class Proposer(ProtocolNode):
+            @on(m.MatchB)
+            def _on_match_b(self, src, msg): ...
+
+    The per-class dispatch table is assembled at class-creation time by
+    ``ProtocolNode.__init_subclass__``; subclasses inherit and may override
+    handlers (latest definition in the MRO wins, like normal methods).
+    """
+
+    def deco(fn: Callable) -> Callable:
+        fn._handles = tuple(msg_types)
+        return fn
+
+    return deco
+
+
+class ProtocolNode:
+    """Base class for protocol roles: pure state machine + effect emitter.
+
+    Subclasses declare message handlers with ``@on(MsgType)``; inbound
+    messages are dispatched through the generated per-class table (no
+    ``isinstance`` chains).  Outbound I/O goes through ``send`` /
+    ``broadcast`` / ``set_timer``, each of which emits an effect through
+    the attached :class:`Transport`.  A node never observes global state.
+    """
+
+    _dispatch_names: Dict[type, str] = {}
+
+    def __init_subclass__(cls, **kw) -> None:
+        super().__init_subclass__(**kw)
+        table: Dict[type, str] = {}
+        for klass in reversed(cls.__mro__):
+            for name, attr in vars(klass).items():
+                for t in getattr(attr, "_handles", ()):
+                    table[t] = name
+        cls._dispatch_names = table
+
+    def __init__(self, addr: Address, *, batch: Optional["BatchPolicy"] = None):
+        self.addr = addr
+        self.failed = False
+        self.transport: Optional[Transport] = None
+        self._handlers: Dict[type, Callable[[Address, Any], None]] = {
+            t: getattr(self, name) for t, name in self._dispatch_names.items()
+        }
+        self.batch = batch if batch is not None and batch.enabled else None
+        self._batch_buf: Dict[Address, List[Any]] = {}
+        self._batch_timer: Optional[TimerHandle] = None
+        # telemetry
+        self.unhandled_count = 0
+        self.batches_sent = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def on_start(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def fail(self) -> None:
+        self.failed = True
+        # A crashed node's buffered (unsent) messages are lost with it.
+        # The flush timer must be dropped too: transports suppress timer
+        # callbacks while a node is failed, so a stale handle would keep
+        # `_buffer` from ever re-arming flushing after recover().
+        self._batch_buf.clear()
+        if self._batch_timer is not None:
+            self._batch_timer.cancel()
+            self._batch_timer = None
+
+    def recover(self) -> None:
+        self.failed = False
+
+    # -- dispatch ----------------------------------------------------------
+    def on_message(self, src: Address, msg: Any) -> None:
+        handler = self._handlers.get(type(msg))
+        if handler is None:
+            self.unhandled_count += 1
+            return
+        handler(src, msg)
+
+    @on(m.Batch)
+    def _on_batch(self, src: Address, batch: m.Batch) -> None:
+        """Unwrap a batch envelope: handlers see per-message semantics."""
+        for sub in batch.messages:
+            self.on_message(src, sub)
+
+    # -- effect emission ---------------------------------------------------
+    def emit(self, effect: Effect) -> Optional[TimerHandle]:
+        return self.transport.perform(self.addr, effect)
+
+    def send(self, dst: Address, msg: Any) -> None:
+        if self.batch is not None and type(msg) in self.batch.batchable_set:
+            self._buffer(dst, msg)
+            return
+        self.emit(Send(dst=dst, msg=msg))
+
+    def broadcast(self, dsts: Iterable[Address], msg: Any) -> None:
+        if self.batch is not None and type(msg) in self.batch.batchable_set:
+            for d in dsts:
+                self._buffer(d, msg)
+            return
+        self.emit(Broadcast(dsts=tuple(dsts), msg=msg))
+
+    def set_timer(self, delay: float, fn: Callable[[], None]) -> TimerHandle:
+        return self.emit(SetTimer(delay=delay, callback=fn))
+
+    def cancel_timer(self, handle: TimerHandle) -> None:
+        if handle is not None:
+            handle.cancel()
+
+    @property
+    def now(self) -> float:
+        return self.transport.now
+
+    @property
+    def rng(self) -> random.Random:
+        return self.transport.rng
+
+    @property
+    def sim(self) -> Transport:
+        """Back-compat alias: scenario scripts address the transport."""
+        return self.transport
+
+    # -- hot-path batching -------------------------------------------------
+    def _buffer(self, dst: Address, msg: Any) -> None:
+        buf = self._batch_buf.setdefault(dst, [])
+        buf.append(msg)
+        if len(buf) >= self.batch.max_batch:
+            self._flush_dst(dst)
+        elif self._batch_timer is None and self.batch.flush_interval > 0:
+            self._batch_timer = self.set_timer(
+                self.batch.flush_interval, self._flush_all
+            )
+
+    def _flush_dst(self, dst: Address) -> None:
+        msgs = self._batch_buf.pop(dst, None)
+        if not msgs:
+            return
+        if len(msgs) == 1:
+            self.emit(Send(dst=dst, msg=msgs[0]))
+        else:
+            self.batches_sent += 1
+            self.emit(Send(dst=dst, msg=m.Batch(messages=tuple(msgs))))
+
+    def _flush_all(self) -> None:
+        self._batch_timer = None
+        for dst in list(self._batch_buf):
+            self._flush_dst(dst)
+
+    def flush_batches(self) -> None:
+        """Force-flush every per-destination buffer (tests / shutdown)."""
+        if self._batch_timer is not None:
+            self._batch_timer.cancel()
+        self._flush_all()
+
+
+# ``__init_subclass__`` only fires for subclasses; seed the base table so a
+# bare ProtocolNode also unwraps batch envelopes.
+ProtocolNode._dispatch_names = {m.Batch: "_on_batch"}
+
+
+# --------------------------------------------------------------------------
+# Batching policy
+# --------------------------------------------------------------------------
+def _default_batchable() -> Tuple[type, ...]:
+    # The command hot path: leader->acceptor proposals, acceptor->leader
+    # votes, leader->replica choices, and the replicas' per-command
+    # follow-ons (client replies + replication-watermark acks).  All are
+    # idempotent / monotonic, so coalescing never changes semantics.
+    return (m.Phase2A, m.Phase2B, m.Chosen, m.ClientReply, m.ReplicaAck)
+
+
+@dataclass
+class BatchPolicy:
+    """Coalesce hot-path messages per destination (paper Section 8 setup).
+
+    ``max_batch`` messages to the same destination are wrapped in one
+    ``messages.Batch`` envelope; a partial buffer is flushed after
+    ``flush_interval`` seconds so latency is bounded.  Only the command
+    hot path (Phase2A / Phase2B / Chosen by default) is batched —
+    matchmaking, Phase 1 and reconfiguration control traffic always goes
+    out immediately.
+    """
+
+    max_batch: int = 1
+    flush_interval: float = 100e-6
+    batchable: Tuple[type, ...] = field(default_factory=_default_batchable)
+
+    def __post_init__(self) -> None:
+        self.batchable_set = frozenset(self.batchable)
+        if self.max_batch > 1 and self.flush_interval <= 0:
+            # Without a flush timer, partial buffers below max_batch would
+            # be stranded forever — a protocol stall, not a slow path.
+            raise ValueError(
+                "BatchPolicy with max_batch > 1 requires flush_interval > 0"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_batch > 1

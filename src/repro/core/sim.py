@@ -19,7 +19,13 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+from .runtime import Broadcast, CancelTimer, ProtocolNode, Send, SetTimer
+
 Address = str
+
+# Protocol roles subclass the kernel's ProtocolNode; ``Node`` remains the
+# historical name used throughout the role modules and tests.
+Node = ProtocolNode
 
 
 @dataclass
@@ -31,16 +37,66 @@ class NetworkConfig:
     ~55us per hop.  ``extra_delay`` lets benchmarks inject message-class
     specific delays (the Section 8.2 ablation delays Phase1B and MatchB by
     250ms to simulate a WAN).
+
+    ``per_msg_overhead`` models the sender-side serialization cost of one
+    wire message (syscall + marshalling): each message departs
+    ``per_msg_overhead`` after the previous one from the same sender.  A
+    ``messages.Batch`` envelope counts as a single wire message — this is
+    what makes hot-path batching pay, exactly as in the paper's batched
+    Section 8 deployment.  Disabled (0.0) by default so legacy seeds
+    reproduce byte-for-byte.
     """
 
     base_latency: float = 55e-6
     jitter: float = 8e-6
     drop_prob: float = 0.0
     dup_prob: float = 0.0
+    per_msg_overhead: float = 0.0
     # Optional hook: (src, dst, msg) -> additional seconds of delay.
     extra_delay: Optional[Callable[[Address, Address, Any], float]] = None
     # Optional hook: (src, dst, msg) -> True to force-drop.
     drop_filter: Optional[Callable[[Address, Address, Any], bool]] = None
+
+
+def plan_delivery(
+    cfg: NetworkConfig,
+    rng: random.Random,
+    src: Address,
+    dst: Address,
+    msg: Any,
+    now: float,
+    egress_ready: Dict[Address, float],
+) -> Optional[List[float]]:
+    """The sender-side network model, shared by every transport.
+
+    Returns the list of delivery delays (relative to ``now``, one per
+    duplicate copy), or ``None`` if the message is dropped.  Mutates
+    ``egress_ready`` (per-sender serialization state for
+    ``per_msg_overhead``).  The RNG draw order — drop, dup, then per-copy
+    jitter — is part of the determinism contract; both ``Simulator`` and
+    ``net.AsyncTransport`` must route sends through here so the model
+    can never drift between them.
+    """
+    if cfg.drop_filter is not None and cfg.drop_filter(src, dst, msg):
+        return None
+    if cfg.drop_prob and rng.random() < cfg.drop_prob:
+        return None
+    copies = 2 if cfg.dup_prob and rng.random() < cfg.dup_prob else 1
+    departs = now
+    if cfg.per_msg_overhead:
+        # One wire message (or Batch) at a time leaves each sender,
+        # per_msg_overhead apart.
+        departs = max(now, egress_ready.get(src, 0.0)) + cfg.per_msg_overhead
+        egress_ready[src] = departs
+    delays = []
+    for _ in range(copies):
+        delay = cfg.base_latency
+        if cfg.jitter:
+            delay += rng.expovariate(1.0 / cfg.jitter)
+        if cfg.extra_delay is not None:
+            delay += cfg.extra_delay(src, dst, msg)
+        delays.append((departs - now) + delay)
+    return delays
 
 
 class Timer:
@@ -57,49 +113,13 @@ class Timer:
         self.cancelled = True
 
 
-class Node:
-    """Base class for protocol roles.
-
-    Subclasses implement ``on_message(src, msg)``.  All sends and timers go
-    through the simulator, so a node never observes global state.
-    """
-
-    def __init__(self, addr: Address):
-        self.addr = addr
-        self.sim: "Simulator" = None  # set on register
-        self.failed = False
-
-    # -- lifecycle ---------------------------------------------------------
-    def on_start(self) -> None:  # pragma: no cover - default no-op
-        pass
-
-    def on_message(self, src: Address, msg: Any) -> None:
-        raise NotImplementedError
-
-    def fail(self) -> None:
-        self.failed = True
-
-    def recover(self) -> None:
-        self.failed = False
-
-    # -- conveniences ------------------------------------------------------
-    def send(self, dst: Address, msg: Any) -> None:
-        self.sim.send(self.addr, dst, msg)
-
-    def broadcast(self, dsts, msg: Any) -> None:
-        for d in dsts:
-            self.sim.send(self.addr, d, msg)
-
-    def set_timer(self, delay: float, fn: Callable[[], None]) -> Timer:
-        return self.sim.set_timer(self, delay, fn)
-
-    @property
-    def now(self) -> float:
-        return self.sim.now
-
-
 class Simulator:
-    """Priority-queue discrete-event simulator."""
+    """Priority-queue discrete-event simulator.
+
+    Implements the runtime ``Transport`` protocol: protocol nodes emit
+    ``Send`` / ``Broadcast`` / ``SetTimer`` / ``CancelTimer`` effects and
+    the simulator interprets them against its event heap.
+    """
 
     def __init__(self, seed: int = 0, net: Optional[NetworkConfig] = None):
         self.rng = random.Random(seed)
@@ -109,6 +129,7 @@ class Simulator:
         self._seq = itertools.count()
         self.nodes: Dict[Address, Node] = {}
         self._partitions: List[Tuple[Set[Address], Set[Address]]] = []
+        self._egress_ready: Dict[Address, float] = {}
         # telemetry
         self.messages_sent = 0
         self.messages_delivered = 0
@@ -117,10 +138,26 @@ class Simulator:
     # -- topology ----------------------------------------------------------
     def register(self, node: Node) -> Node:
         assert node.addr not in self.nodes, f"duplicate address {node.addr}"
-        node.sim = self
+        node.transport = self
         self.nodes[node.addr] = node
         node.on_start()
         return node
+
+    # -- effect interpretation (runtime.Transport) --------------------------
+    def perform(self, src: Address, effect: Any) -> Optional[Timer]:
+        if isinstance(effect, Send):
+            self.send(src, effect.dst, effect.msg)
+        elif isinstance(effect, Broadcast):
+            for d in effect.dsts:
+                self.send(src, d, effect.msg)
+        elif isinstance(effect, SetTimer):
+            return self.set_timer(self.nodes[src], effect.delay, effect.callback)
+        elif isinstance(effect, CancelTimer):
+            if effect.handle is not None:
+                effect.handle.cancel()
+        else:
+            raise TypeError(f"unknown effect {effect!r}")
+        return None
 
     def partition(self, side_a: Set[Address], side_b: Set[Address]) -> None:
         """Drop all messages between ``side_a`` and ``side_b`` until healed."""
@@ -164,22 +201,13 @@ class Simulator:
         if self._partitioned(src, dst):
             self.messages_dropped += 1
             return
-        cfg = self.net
-        if cfg.drop_filter is not None and cfg.drop_filter(src, dst, msg):
+        delays = plan_delivery(
+            self.net, self.rng, src, dst, msg, self.now, self._egress_ready
+        )
+        if delays is None:
             self.messages_dropped += 1
             return
-        if cfg.drop_prob and self.rng.random() < cfg.drop_prob:
-            self.messages_dropped += 1
-            return
-        copies = 1
-        if cfg.dup_prob and self.rng.random() < cfg.dup_prob:
-            copies = 2
-        for _ in range(copies):
-            delay = cfg.base_latency
-            if cfg.jitter:
-                delay += self.rng.expovariate(1.0 / cfg.jitter)
-            if cfg.extra_delay is not None:
-                delay += cfg.extra_delay(src, dst, msg)
+        for delay in delays:
             self._push(self.now + delay, lambda m=msg: self._deliver(src, dst, m))
 
     def _deliver(self, src: Address, dst: Address, msg: Any) -> None:

@@ -19,6 +19,7 @@ from . import messages as m
 from .oracle import Oracle
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
+from .runtime import on
 from .sim import Address, Node
 
 SLOT = 0  # single decree: everything lives at slot 0
@@ -112,27 +113,16 @@ class SingleDecreeProposer(Node):
             self._next_attempt()
 
     # ------------------------------------------------------------------
-    def on_message(self, src: Address, msg: Any) -> None:
-        if isinstance(msg, m.MatchB):
-            self._on_match_b(src, msg)
-        elif isinstance(msg, m.MatchNack):
-            self._on_nack(msg.witnessed)
-        elif isinstance(msg, m.Phase1B):
-            self._on_phase1b(src, msg)
-        elif isinstance(msg, m.Phase1Nack):
-            self._on_nack(msg.witnessed)
-        elif isinstance(msg, m.Phase2B):
-            self._on_phase2b(src, msg)
-        elif isinstance(msg, m.Phase2Nack):
-            self._on_nack(msg.witnessed)
-        elif isinstance(msg, m.GarbageB):
-            pass
+    @on(m.MatchNack, m.Phase1Nack, m.Phase2Nack)
+    def _on_any_nack(self, src: Address, msg: Any) -> None:
+        self._on_nack(msg.witnessed)
 
     def _on_nack(self, witnessed: Any) -> None:
         if isinstance(witnessed, Round):
             self.max_witnessed = max_round(self.max_witnessed, witnessed)
 
     # -- Matchmaking (Algorithm 3 lines 6-8) ----------------------------
+    @on(m.MatchB)
     def _on_match_b(self, src: Address, msg: m.MatchB) -> None:
         if self._phase != "matchmaking" or msg.round != self.round:
             return
@@ -155,6 +145,7 @@ class SingleDecreeProposer(Node):
             self.broadcast(c.acceptors, m.Phase1A(round=self.round, from_slot=SLOT))
 
     # -- Phase 1 (Algorithm 3 lines 9-13) --------------------------------
+    @on(m.Phase1B)
     def _on_phase1b(self, src: Address, msg: m.Phase1B) -> None:
         if self._phase != "phase1" or msg.round != self.round:
             return
@@ -196,6 +187,7 @@ class SingleDecreeProposer(Node):
         )
 
     # -- Phase 2 (Algorithm 3 lines 14-15) -------------------------------
+    @on(m.Phase2B)
     def _on_phase2b(self, src: Address, msg: m.Phase2B) -> None:
         if self._phase != "phase2" or msg.round != self.round:
             return

@@ -1,0 +1,178 @@
+"""A minimal, deterministic stand-in for ``hypothesis``.
+
+The property tests in this repo use a small slice of the hypothesis API
+(``given`` / ``settings`` / ``strategies.integers|booleans|sampled_from|
+tuples|data``).  When the real library is unavailable (it is an optional
+dev dependency — see requirements-dev.txt), ``tests/conftest.py``
+installs this module under the ``hypothesis`` name so the suite still
+*collects and runs everywhere*, executing each property as a fixed,
+seeded sweep of examples instead of hypothesis' adaptive search.
+
+This is an example-based fallback, not a replacement: no shrinking, no
+coverage-guided generation.  Install ``hypothesis`` for the real thing.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+from typing import Any, Callable, Dict, List, Tuple
+
+# Cap the fallback sweep so CI stays fast; the declared max_examples is
+# honoured up to this bound.  Override with REPRO_STUB_MAX_EXAMPLES.
+_STUB_CAP = int(os.environ.get("REPRO_STUB_MAX_EXAMPLES", "12"))
+_DEFAULT_EXAMPLES = 10
+_SEED = 0xC0FFEE
+
+
+class Strategy:
+    """A deterministic value source: ``draw(rng)`` plus a minimal value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], minimal: Any = None):
+        self._draw = draw
+        self._minimal = minimal
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def minimal(self) -> Any:
+        return self._minimal
+
+
+class _DataStrategy(Strategy):
+    """Marker for ``st.data()``; ``given`` injects a :class:`DataObject`."""
+
+    def __init__(self):
+        super().__init__(lambda rng: None)
+
+
+class DataObject:
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label: str = "") -> Any:
+        return strategy.draw(self._rng)
+
+
+class strategies:
+    """The subset of ``hypothesis.strategies`` used by this repo."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> Strategy:
+        return Strategy(
+            lambda rng: rng.randint(min_value, max_value), minimal=min_value
+        )
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: rng.random() < 0.5, minimal=False)
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> Strategy:
+        return Strategy(
+            lambda rng: rng.uniform(min_value, max_value), minimal=min_value
+        )
+
+    @staticmethod
+    def sampled_from(seq) -> Strategy:
+        values = list(seq)
+        return Strategy(lambda rng: rng.choice(values), minimal=values[0])
+
+    @staticmethod
+    def tuples(*ss: Strategy) -> Strategy:
+        return Strategy(
+            lambda rng: tuple(s.draw(rng) for s in ss),
+            minimal=tuple(s.minimal() for s in ss),
+        )
+
+    @staticmethod
+    def lists(elem: Strategy, min_size: int = 0, max_size: int = 8) -> Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            return [elem.draw(rng) for _ in range(n)]
+
+        return Strategy(draw, minimal=[elem.minimal()] * min_size)
+
+    @staticmethod
+    def data() -> Strategy:
+        return _DataStrategy()
+
+
+st = strategies
+
+
+def settings(*args, max_examples: int = _DEFAULT_EXAMPLES, **kwargs):
+    """Record the example budget; every other knob is ignored."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies: Strategy, **kw_strategies: Strategy):
+    """Run the property as a fixed sweep of deterministically drawn examples.
+
+    Example 0 uses each strategy's minimal value (so e.g. ``drop=0.0``
+    always gets covered); the rest are drawn from a per-test seeded RNG.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*outer_args, **outer_kwargs):
+            declared = getattr(
+                wrapper, "_stub_max_examples",
+                getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES),
+            )
+            n = min(declared, _STUB_CAP)
+            rng = random.Random(f"{_SEED}:{fn.__module__}:{fn.__qualname__}")
+            for i in range(n):
+                pos = tuple(
+                    _example(s, rng, minimal=(i == 0)) for s in pos_strategies
+                )
+                kws = {
+                    k: _example(s, rng, minimal=(i == 0))
+                    for k, s in kw_strategies.items()
+                }
+                fn(*outer_args, *pos, **outer_kwargs, **kws)
+
+        # Hide the strategy-bound parameters from pytest's fixture
+        # resolution: the wrapper's visible signature keeps only the
+        # params the caller still supplies (e.g. ``self``).
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values() if p.name not in kw_strategies]
+        if pos_strategies:
+            params = params[: -len(pos_strategies)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return deco
+
+
+def _example(s: Strategy, rng: random.Random, *, minimal: bool) -> Any:
+    if isinstance(s, _DataStrategy):
+        return DataObject(rng)
+    return s.minimal() if minimal else s.draw(rng)
+
+
+def _install() -> None:
+    """Register this module as ``hypothesis`` (+``hypothesis.strategies``)."""
+    import sys
+    import types
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.Strategy = Strategy
+    mod.__stub__ = True
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in dir(strategies):
+        if not name.startswith("_"):
+            setattr(st_mod, name, getattr(strategies, name))
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

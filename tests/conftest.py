@@ -1,0 +1,19 @@
+"""Test-suite bootstrap.
+
+If the optional ``hypothesis`` dev dependency is missing (see
+requirements-dev.txt), install the deterministic example-based stub from
+``tests/_hypothesis_stub.py`` under the ``hypothesis`` module name so the
+property-test modules collect and run everywhere.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    _hypothesis_stub._install()

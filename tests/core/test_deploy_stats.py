@@ -1,0 +1,44 @@
+"""Deployment reporting statistics (Tables 1 and 2 plumbing)."""
+
+import statistics
+
+import pytest
+
+from benchmarks import common
+from repro.core.deploy import Deployment
+
+
+class TestSummaryIQR:
+    def test_empty(self):
+        s = Deployment.summary([])
+        assert s == {"median": 0.0, "iqr": 0.0, "stdev": 0.0, "n": 0}
+
+    def test_single_sample_iqr_is_zero(self):
+        # Regression: n < 4 used to report max - min mislabeled as "iqr".
+        s = Deployment.summary([3.0])
+        assert s["iqr"] == 0.0
+        assert s["median"] == 3.0
+        assert s["n"] == 1
+
+    def test_small_n_reports_zero_not_max_minus_min(self):
+        # Regression: n < 4 used to report max - min mislabeled as "iqr";
+        # below four samples the quartile estimate degenerates, so the
+        # summary now reports 0.0.
+        for xs in ([1.0, 9.0], [1.0, 5.0, 9.0], [1.0, 2.0, 3.0]):
+            s = Deployment.summary(xs)
+            assert s["iqr"] == 0.0
+            assert s["median"] == pytest.approx(statistics.median(xs))
+            assert s["n"] == len(xs)
+
+    def test_large_n_matches_quantiles(self):
+        xs = [float(i) for i in range(100)]
+        s = Deployment.summary(xs)
+        q = statistics.quantiles(xs, n=4)
+        assert s["iqr"] == pytest.approx(q[2] - q[0])
+        assert s["median"] == pytest.approx(statistics.median(xs))
+
+    def test_benchmarks_summary_agrees(self):
+        for xs in ([2.0], [1.0, 4.0, 10.0], [float(i) for i in range(20)]):
+            assert common.summary(xs)["iqr"] == pytest.approx(
+                Deployment.summary(xs)["iqr"]
+            )

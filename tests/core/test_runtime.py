@@ -1,0 +1,312 @@
+"""The protocol kernel: typed dispatch, effects, transports, batching.
+
+Covers the runtime redesign's acceptance criteria:
+
+  * role classes dispatch through the typed ``@on`` registry (no
+    ``isinstance`` chains in ``on_message`` bodies);
+  * handlers emit effects through the Transport boundary only;
+  * the deterministic simulator and the asyncio transport choose
+    identical logs for the same client workload with the *same
+    unmodified* role classes;
+  * hot-path batching preserves at-most-once semantics under
+    duplicated / reordered delivery.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (
+    AsyncTransport,
+    BatchPolicy,
+    Broadcast,
+    ClusterSpec,
+    NetworkConfig,
+    PipelinedClient,
+    ProtocolNode,
+    Send,
+    SetTimer,
+    Simulator,
+    build,
+    on,
+)
+from repro.core import messages as m
+from repro.core.acceptor import Acceptor
+from repro.core.client import Client
+from repro.core.fast_paxos import FastAcceptor, FastCoordinator
+from repro.core.horizontal import HorizontalProposer
+from repro.core.matchmaker import Matchmaker
+from repro.core.mm_reconfig import MMReconfigCoordinator
+from repro.core.proposer import Options, Proposer
+from repro.core.replica import Replica
+from repro.core.single import SingleDecreeProposer
+
+
+# --------------------------------------------------------------------------
+# Typed dispatch
+# --------------------------------------------------------------------------
+ROLE_CLASSES = [
+    Proposer,
+    Acceptor,
+    Matchmaker,
+    Replica,
+    Client,
+    PipelinedClient,
+    SingleDecreeProposer,
+    FastAcceptor,
+    FastCoordinator,
+    HorizontalProposer,
+    MMReconfigCoordinator,
+]
+
+
+def test_every_role_uses_registry_dispatch():
+    """No role overrides on_message: all dispatch is the typed registry."""
+    for cls in ROLE_CLASSES:
+        assert "on_message" not in vars(cls), cls.__name__
+        assert cls._dispatch_names, f"{cls.__name__} has an empty registry"
+        # Every registered handler resolves to a real method.
+        for t, name in cls._dispatch_names.items():
+            assert callable(getattr(cls, name)), (cls.__name__, t)
+
+
+def test_dispatch_routes_by_type_and_ignores_unknown():
+    sim = Simulator(seed=0)
+    acc = sim.register(Acceptor("a0"))
+    acc.on_message("x", m.StopA())  # acceptors don't handle StopA
+    assert acc.unhandled_count == 1
+    from repro.core.rounds import Round
+
+    acc.on_message("x", m.Phase1A(round=Round(0, 0, 0)))
+    assert acc.phase1_count == 1
+
+
+def test_subclass_can_override_inherited_handler():
+    class CountingAcceptor(Acceptor):
+        hits = 0
+
+        @on(m.Ping)
+        def _on_ping(self, src, msg):
+            CountingAcceptor.hits += 1
+
+    sim = Simulator(seed=0)
+    a = sim.register(CountingAcceptor("a0"))
+    a.on_message("x", m.Ping(nonce=7))
+    assert CountingAcceptor.hits == 1
+    assert sim.messages_sent == 0  # override suppressed the Pong
+
+
+class _Recorder:
+    """A Transport that records effects instead of interpreting them."""
+
+    def __init__(self):
+        self.rng = random.Random(0)
+        self.effects = []
+        self.now = 0.0
+
+    def register(self, node):
+        node.transport = self
+        return node
+
+    def perform(self, src, effect):
+        self.effects.append((src, effect))
+        return None
+
+
+def test_handlers_emit_effects_through_transport():
+    t = _Recorder()
+    acc = t.register(Acceptor("a0"))
+    from repro.core.rounds import Round
+
+    acc.on_message("p0", m.Phase1A(round=Round(0, 0, 0)))
+    kinds = [type(e) for (_, e) in t.effects]
+    assert kinds == [Send]
+    src, eff = t.effects[0]
+    assert src == "a0" and eff.dst == "p0" and isinstance(eff.msg, m.Phase1B)
+
+
+def test_batch_envelope_unwraps_to_per_message_semantics():
+    sim = Simulator(seed=0)
+    acc = sim.register(Acceptor("a0"))
+    from repro.core.rounds import Round
+
+    r = Round(0, 0, 0)
+    batch = m.Batch(
+        messages=(
+            m.Phase2A(round=r, slot=0, value="x"),
+            m.Phase2A(round=r, slot=1, value="y"),
+        )
+    )
+    acc.on_message("p0", batch)
+    assert acc.votes == {0: (r, "x"), 1: (r, "y")}
+
+
+# --------------------------------------------------------------------------
+# Batching
+# --------------------------------------------------------------------------
+def test_batching_coalesces_per_destination():
+    t = _Recorder()
+    node = t.register(
+        ProtocolNode("n0", batch=BatchPolicy(max_batch=3, flush_interval=1.0))
+    )
+    ch = lambda s: m.Chosen(slot=s, value="v")
+    node.send("r0", ch(0))
+    node.send("r1", ch(0))
+    node.send("r0", ch(1))
+    sends = [e for (_, e) in t.effects if isinstance(e, Send)]
+    assert sends == []  # buffered, below max_batch
+    node.send("r0", ch(2))  # r0 hits max_batch=3
+    sends = [e for (_, e) in t.effects if isinstance(e, Send)]
+    assert len(sends) == 1 and sends[0].dst == "r0"
+    assert isinstance(sends[0].msg, m.Batch) and len(sends[0].msg.messages) == 3
+    node.flush_batches()  # r1's partial buffer: single message, no envelope
+    sends = [e for (_, e) in t.effects if isinstance(e, Send)]
+    assert sends[-1].dst == "r1" and isinstance(sends[-1].msg, m.Chosen)
+
+
+def test_fail_recover_rearms_batch_flush_timer():
+    """Regression: a stale flush-timer handle after fail() must not keep a
+    recovered node's partial batches stranded forever."""
+    sim = Simulator(seed=0)
+    node = sim.register(
+        ProtocolNode("n0", batch=BatchPolicy(max_batch=8, flush_interval=1e-3))
+    )
+    sink = sim.register(ProtocolNode("r0"))
+    node.send("r0", m.Chosen(slot=0, value="v"))  # arms the flush timer
+    node.fail()
+    assert node._batch_timer is None  # handle dropped with the buffers
+    sim.run_for(0.01)
+    node.recover()
+    node.send("r0", m.Chosen(slot=1, value="w"))  # must re-arm the timer
+    sim.run_for(0.01)
+    assert sim.messages_delivered == 1  # slot-1 Chosen flushed on interval
+
+
+def test_batch_policy_rejects_unflushable_config():
+    with pytest.raises(ValueError):
+        BatchPolicy(max_batch=8, flush_interval=0.0)
+
+
+def test_non_batchable_messages_bypass_buffering():
+    t = _Recorder()
+    node = t.register(
+        ProtocolNode("n0", batch=BatchPolicy(max_batch=8, flush_interval=1.0))
+    )
+    node.send("mm0", m.StopA())
+    assert [type(e) for (_, e) in t.effects] == [Send]
+
+
+def test_batching_preserves_at_most_once_under_dup_and_reorder():
+    """dup_prob > 0 duplicates Batch envelopes; jitter reorders them.
+
+    The oracle's check_client_results asserts every command observed
+    exactly one result; replica logs must agree on every shared slot.
+    """
+    opts = Options(batch_max=8, batch_flush_interval=200e-6)
+    d = build(
+        f=1,
+        n_clients=3,
+        seed=7,
+        options=opts,
+        net=NetworkConfig(dup_prob=0.2, drop_prob=0.02),
+    )
+    d.start_clients()
+    d.sim.run_for(0.5)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    d.check_all()
+    assert len(d.oracle.chosen) > 50
+    # batching actually engaged on this run
+    assert any(n.batches_sent > 0 for n in d.sim.nodes.values())
+
+
+def test_batching_throughput_beats_unbatched():
+    """Simulated commands/sec with batch_max=16 >= 2x batch_max=1 (the
+    acceptance anchor; the full curve lives in benchmarks/bench_batching)."""
+    from benchmarks.bench_batching import run_one
+
+    t1 = run_one(1, duration=0.2)["commands_per_sec"]
+    t16 = run_one(16, duration=0.2)["commands_per_sec"]
+    assert t16 >= 2.0 * t1, (t1, t16)
+
+
+def test_batching_disabled_is_byte_for_byte_legacy():
+    """batch_max=1 (default) must not perturb the event sequence at all."""
+    runs = []
+    for _ in range(2):
+        d = build(f=1, n_clients=2, seed=3)
+        d.start_clients()
+        d.sim.run_for(0.3)
+        d.stop_clients()
+        d.sim.run_for(0.05)
+        runs.append((len(d.oracle.chosen), d.sim.messages_sent, d.sim.now))
+    assert runs[0] == runs[1]
+
+
+# --------------------------------------------------------------------------
+# Transport parity: simulator vs asyncio
+# --------------------------------------------------------------------------
+def _workload(transport, n_commands=20):
+    spec = ClusterSpec(
+        f=1, n_clients=1, client_max_commands=n_commands, auto_elect_leader=False
+    )
+    dep = spec.instantiate(transport)
+    dep.proposers[0].become_leader(
+        dep.fresh_config([a.addr for a in dep.acceptors[:3]])
+    )
+    return dep
+
+
+def test_cluster_spec_auto_elects_on_instantiate():
+    """auto_elect_leader works through instantiate() on any transport,
+    not just the build() wrapper."""
+    sim = Simulator(seed=0)
+    dep = ClusterSpec(f=1, n_clients=1, client_max_commands=5).instantiate(sim)
+    sim.run_for(0.01)
+    assert dep.proposers[0].is_leader
+    dep.start_clients()
+    sim.run_for(0.5)
+    dep.check_all()
+    assert dep.clients[0].done
+
+
+def test_sim_and_asyncio_transports_choose_identical_logs():
+    n = 20
+    dep_s = _workload(Simulator(seed=0), n)
+    dep_s.start_clients()
+    dep_s.sim.run_for(2.0)
+    dep_s.check_all()
+    log_s = {s: repr(r.value) for s, r in dep_s.oracle.chosen.items()}
+    assert dep_s.clients[0].done and len(log_s) == n
+
+    t = AsyncTransport(seed=0)
+    dep_a = _workload(t, n)
+    dep_a.start_clients()
+    t.run(20.0, until=lambda: all(c.done for c in dep_a.clients))
+    dep_a.check_all()
+    log_a = {s: repr(r.value) for s, r in dep_a.oracle.chosen.items()}
+
+    assert dep_a.clients[0].done, "asyncio workload did not finish"
+    assert log_s == log_a
+    # replica-state equality across transports
+    state_s = sorted(dep_s.replicas[0].executed.keys())
+    state_a = sorted(dep_a.replicas[0].executed.keys())
+    assert state_s == state_a
+
+
+def test_asyncio_transport_with_batching():
+    t = AsyncTransport(seed=1)
+    opts = Options(batch_max=4, batch_flush_interval=1e-3)
+    spec = ClusterSpec(
+        f=1, n_clients=1, options=opts, client_max_commands=12,
+        auto_elect_leader=False,
+    )
+    dep = spec.instantiate(t)
+    dep.proposers[0].become_leader(
+        dep.fresh_config([a.addr for a in dep.acceptors[:3]])
+    )
+    dep.start_clients()
+    t.run(20.0, until=lambda: all(c.done for c in dep.clients))
+    dep.check_all()
+    assert dep.clients[0].done
+    assert len(dep.oracle.chosen) == 12
