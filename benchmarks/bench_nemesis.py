@@ -1,0 +1,160 @@
+"""Reconfiguration under fire: throughput dips vs the steady state.
+
+The paper's Section 8 headline is that Matchmaker MultiPaxos reconfigures
+"with little to no impact on the latency or throughput of command
+processing" (Figure 9: throughput with reconfigurations every second is
+indistinguishable from none).  This benchmark turns that claim into a
+checked number, and extends it to adversarial conditions the paper only
+argues about:
+
+  * ``steady``          — no faults (the baseline).
+  * ``reconfig``        — an acceptor reconfiguration every 100 ms
+                          (Section 8.1's cadence, scaled): the paper's
+                          claim is dip ~ 1.
+  * ``reconfig_storm``  — the same cadence under a drop/dup/delay storm
+                          on the acceptor pool (Section 2.1 adversary).
+  * ``leader_kill9``    — kill -9 of the leader mid-run with follower
+                          takeover and later restart (Figure 19 shape:
+                          a real dip, then full recovery).
+
+Emits ``BENCH_nemesis.json`` with sliding-window medians per phase and
+the dip ratios; the scenario-harness invariants are checked on every run
+(an unsafe benchmark result is a failed benchmark).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.core import ClusterSpec, KVStoreSM, NetworkConfig, Options, Simulator
+from repro.core.deploy import Deployment
+from repro.core.nemesis import (
+    Crash,
+    Event,
+    Heal,
+    ReconfigureRandom,
+    Restart,
+    Schedule,
+    StartClients,
+    StopClients,
+    Storm,
+    Takeover,
+    check_invariants,
+)
+
+from . import common
+
+N_CLIENTS = 4
+WARMUP = 0.05
+DURATION = 0.45  # measured window after warmup
+WINDOW = 0.05
+STRIDE = 0.01
+
+
+def _spec() -> ClusterSpec:
+    return ClusterSpec(
+        f=1,
+        n_clients=N_CLIENTS,
+        sm_factory=KVStoreSM,
+        client_retry_timeout=0.06,
+        options=Options(phase2_retry_timeout=0.05),
+    )
+
+
+def _events(kind: str) -> List[Event]:
+    t0, t1 = WARMUP, WARMUP + DURATION
+    events = [Event(0.005, StartClients()), Event(t1 + 0.02, StopClients())]
+    if kind == "steady":
+        return events
+    if kind in ("reconfig", "reconfig_storm"):
+        t = t0 + 0.02
+        while t < t1 - 0.02:
+            events.append(Event(t, ReconfigureRandom()))
+            t += 0.1
+    if kind == "reconfig_storm":
+        events.append(
+            Event(
+                t0,
+                Storm(
+                    drop=0.05,
+                    dup=0.1,
+                    delay=0.5e-3,
+                    targets=tuple(f"a{i}" for i in range(6)),
+                    tag="bench-storm",
+                ),
+            )
+        )
+        events.append(Event(t1, Heal()))
+    if kind == "leader_kill9":
+        events.append(Event(t0 + 0.1, Crash("p0", clean=False)))
+        events.append(Event(t0 + 0.15, Takeover(1)))
+        events.append(Event(t0 + 0.3, Restart("p0", wipe_volatile=True)))
+    return events
+
+
+def run_one(kind: str, *, seed: int = 0) -> Dict[str, Any]:
+    sim = Simulator(seed=seed, net=NetworkConfig())
+    dep = _spec().instantiate(sim)
+    schedule = Schedule(f"bench_{kind}", seed, tuple(sorted(_events(kind), key=lambda e: e.at)))
+    nem = dep.attach_nemesis(schedule, check=None)  # invariants once, at the end
+    horizon = WARMUP + DURATION + 0.15
+    sim.run_until(horizon)
+    violations = check_invariants(dep)
+    assert not violations, f"UNSAFE BENCH RUN {nem.replay_line()}: {violations[:3]}"
+
+    t0, t1 = WARMUP, WARMUP + DURATION
+    samples = dep.throughput_samples(t0, t1, window=WINDOW, stride=STRIDE)
+    s = Deployment.summary(samples)
+    return {
+        "kind": kind,
+        "seed": seed,
+        "median_tput": s["median"],
+        "iqr_tput": s["iqr"],
+        "min_window_tput": min(samples) if samples else 0.0,
+        "completed": sum(len(c.latencies) for c in dep.clients),
+        "chosen_slots": len(dep.oracle.chosen),
+        "reconfigs": len(dep.oracle.reconfig_durations),
+    }
+
+
+def main(fast: bool = True) -> Dict[str, Any]:
+    kinds = ("steady", "reconfig", "reconfig_storm", "leader_kill9")
+    seeds = (0,) if fast else (0, 1, 2)
+    rows = []
+    for kind in kinds:
+        for seed in seeds:
+            row = run_one(kind, seed=seed)
+            rows.append(row)
+            common.record("nemesis", **row)
+    base = [r["median_tput"] for r in rows if r["kind"] == "steady"]
+    steady = sum(base) / len(base)
+    result: Dict[str, Any] = {"workload": {
+        "clients": N_CLIENTS, "duration_s": DURATION, "window_s": WINDOW,
+        "seeds": list(seeds),
+    }, "phases": {}}
+    for kind in kinds:
+        meds = [r["median_tput"] for r in rows if r["kind"] == kind]
+        med = sum(meds) / len(meds)
+        result["phases"][kind] = {
+            "median_tput": med,
+            "dip_vs_steady": med / steady if steady else 0.0,
+        }
+    out = os.environ.get("BENCH_NEMESIS_JSON", "BENCH_nemesis.json")
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    return result
+
+
+if __name__ == "__main__":
+    result = main()
+    common.emit_csv()
+    phases = result["phases"]
+    print(
+        "\nreconfig-every-100ms dip vs steady: "
+        f"{phases['reconfig']['dip_vs_steady']:.3f} "
+        "(paper Section 8: 'little to no impact')"
+    )
+    print(f"under storm: {phases['reconfig_storm']['dip_vs_steady']:.3f}; "
+          f"leader kill -9: {phases['leader_kill9']['dip_vs_steady']:.3f}")

@@ -31,6 +31,7 @@ def main() -> None:
         bench_horizontal,
         bench_leader_failure,
         bench_matchmaker_reconfig,
+        bench_nemesis,
         bench_reconfiguration,
         bench_roofline,
         bench_thriftiness,
@@ -46,6 +47,7 @@ def main() -> None:
         ("sec7 fast paxos", bench_fast_paxos.main),
         ("fig14 thriftiness", bench_thriftiness.main),
         ("sec8 hot-path batching", bench_batching.main),
+        ("sec8 reconfiguration under fire", bench_nemesis.main),
         ("elastic control plane", bench_elastic.main),
         ("roofline table", bench_roofline.main),
     ]

@@ -160,6 +160,61 @@ class ClusterController:
         self.sim.run_for(0.05)
         self.commit(ReconfigCommand(epoch=0, pods=self.epoch_pods))
 
+    # -- failure detection --------------------------------------------------
+    def attach_detector(
+        self,
+        spares: Sequence[str] = (),
+        *,
+        ping_interval: float = 0.02,
+        suspect_after: float = 0.08,
+        confirm_misses: int = 2,
+    ):
+        """Wire a heartbeat FailureDetector over every pod's acceptors.
+
+        A *confirmed* suspicion (``confirm_misses`` consecutive silent
+        probe rounds — transport-level crash evidence, not a synthetic
+        flag) replaces the dead pod with the next spare and drives a real
+        ``reconfigure``.  Returns the detector; suspicion history is on
+        ``detector.suspected`` / the controller's ``failover_log``.
+        """
+        from repro.coord.failure import FailureDetector
+
+        self._spares: List[str] = list(spares)
+        self.failover_log: List[Dict[str, Any]] = []
+
+        def on_suspect(pod: str) -> None:
+            if pod not in self.epoch_pods:
+                return
+            replacement = self._spares.pop(0) if self._spares else None
+            new_pods = [
+                p for p in self.epoch_pods if p != pod
+            ] + ([replacement] if replacement else [])
+            if len(new_pods) == 0:
+                return
+            telemetry = self.reconfigure(new_pods)
+            self.detector.unwatch(pod)
+            if replacement is not None:
+                # Keep watching the whole live membership: the promoted
+                # spare must be probed too, or the cluster is blind to any
+                # failure after the first.
+                self.detector.watch(
+                    replacement, self.pods[replacement].acceptor_addrs
+                )
+            self.failover_log.append(
+                {"suspected": pod, "replacement": replacement, **telemetry}
+            )
+
+        self.detector = FailureDetector(
+            "detector",
+            {p: info.acceptor_addrs for p, info in self.pods.items()},
+            ping_interval=ping_interval,
+            suspect_after=suspect_after,
+            confirm_misses=confirm_misses,
+            on_suspect=on_suspect,
+        )
+        self.sim.register(self.detector)
+        return self.detector
+
     # -- pod / acceptor management ----------------------------------------
     def add_pod(self, name: str) -> PodInfo:
         if name in self.pods:

@@ -9,6 +9,17 @@ from .fast_paxos import FastAcceptor, FastClient, FastCoordinator
 from .horizontal import ConfigChange, HorizontalProposer
 from .matchmaker import Matchmaker
 from .mm_reconfig import MMReconfigCoordinator
+from .nemesis import (
+    Crash,
+    FaultPlane,
+    Heal,
+    Nemesis,
+    Partition,
+    Restart,
+    Schedule,
+    Storm,
+    check_invariants,
+)
 from .net import AsyncTransport
 from .oracle import Oracle, SafetyViolation
 from .proposer import Options, Proposer
@@ -25,17 +36,27 @@ from .runtime import (
     Transport,
     on,
 )
+from .scenarios import (
+    SCENARIO_NAMES,
+    ScenarioFailure,
+    ScenarioResult,
+    run_matrix,
+    run_scenario,
+)
 from .sim import NetworkConfig, Node, Simulator
 from .single import SingleDecreeProposer
 
 __all__ = [
     "Acceptor", "AsyncTransport", "BatchPolicy", "Broadcast", "CancelTimer",
-    "Client", "ClusterSpec", "ConfigChange", "Configuration", "Deployment",
-    "FastAcceptor", "FastClient", "FastCoordinator", "HorizontalProposer",
-    "KVStoreSM", "MMReconfigCoordinator", "Matchmaker", "NEG_INF",
-    "NetworkConfig", "Node", "NoopSM", "Options", "Oracle", "PipelinedClient",
-    "ProtocolNode", "Proposer", "QuorumSpec", "Replica", "Round",
-    "SafetyViolation", "Send", "SetTimer", "Simulator",
-    "SingleDecreeProposer", "StateMachine", "Transport", "build",
-    "initial_round", "max_round", "on",
+    "Client", "ClusterSpec", "ConfigChange", "Configuration", "Crash",
+    "Deployment", "FastAcceptor", "FastClient", "FastCoordinator",
+    "FaultPlane", "Heal", "HorizontalProposer", "KVStoreSM",
+    "MMReconfigCoordinator", "Matchmaker", "NEG_INF", "Nemesis",
+    "NetworkConfig", "Node", "NoopSM", "Options", "Oracle", "Partition",
+    "PipelinedClient", "ProtocolNode", "Proposer", "QuorumSpec", "Replica",
+    "Restart", "Round", "SCENARIO_NAMES", "SafetyViolation", "ScenarioFailure",
+    "ScenarioResult", "Schedule", "Send", "SetTimer", "Simulator",
+    "SingleDecreeProposer", "StateMachine", "Storm", "Transport", "build",
+    "check_invariants", "initial_round", "max_round", "on", "run_matrix",
+    "run_scenario",
 ]

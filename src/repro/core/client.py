@@ -51,6 +51,15 @@ class Client(Node):
         if self._retry_timer is not None:
             self._retry_timer.cancel()
 
+    def on_restart(self) -> None:
+        # The retry timer died with the crash; re-arm so the in-flight
+        # command (or the next one) is driven again.
+        if self.running:
+            if self.inflight is not None:
+                self._send_current()
+            else:
+                self._propose_next()
+
     def _propose_next(self) -> None:
         if not self.running or self.failed:
             return
@@ -133,6 +142,11 @@ class PipelinedClient(Node):
         self.running = False
         if self._retry_timer is not None:
             self._retry_timer.cancel()
+
+    def on_restart(self) -> None:
+        if self.running:
+            self._fill_window()
+            self._arm_retry()
 
     def _fill_window(self) -> None:
         leader = self.leader_provider()

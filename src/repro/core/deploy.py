@@ -49,6 +49,10 @@ class Deployment:
     clients: List[Client]
     mm_coordinator: MMReconfigCoordinator
     config_seq: int = 0
+    # The state-machine factory the replicas were built with; the nemesis
+    # invariant checker replays the chosen log through a fresh instance to
+    # verify client-observed results are linearizable.
+    sm_factory: Callable[[], StateMachine] = NoopSM
 
     # ------------------------------------------------------------------
     @property
@@ -57,10 +61,21 @@ class Deployment:
 
     @property
     def leader(self) -> Proposer:
+        # A crashed node may still carry a stale is_leader flag; clients
+        # and scenario scripts must never be routed to a corpse.
         for p in self.proposers:
-            if p.is_leader:
+            if p.is_leader and not p.failed:
+                return p
+        for p in self.proposers:
+            if not p.failed:
                 return p
         return self.proposers[0]
+
+    def attach_nemesis(self, schedule, **kw):
+        """Bind a nemesis schedule to this deployment (armed immediately)."""
+        from .nemesis import Nemesis  # deploy is imported by nemesis users
+
+        return Nemesis(self, schedule, **kw).arm()
 
     def fresh_config(self, acceptor_addrs: Sequence[str]) -> Configuration:
         self.config_seq += 1
@@ -161,6 +176,7 @@ class ClusterSpec:
     acceptor_pool: Optional[int] = None
     client_think_time: float = 0.0
     client_max_commands: Optional[int] = None
+    client_retry_timeout: float = 0.5
     auto_elect_leader: bool = True
 
     # -- address plan ----------------------------------------------------
@@ -225,11 +241,11 @@ class ClusterSpec:
 
         def current_leader() -> Optional[str]:
             for p in proposers:
-                if p.is_leader:
+                if p.is_leader and not p.failed:
                     return p.addr
-            # Fall back to whoever the proposers believe leads.
+            # Fall back to whoever the live proposers believe leads.
             for p in proposers:
-                if p.leader_addr:
+                if p.leader_addr and not p.failed:
                     return p.leader_addr
             return prop_addrs[0]
 
@@ -239,6 +255,7 @@ class ClusterSpec:
                 current_leader,
                 think_time=self.client_think_time,
                 max_commands=self.client_max_commands,
+                retry_timeout=self.client_retry_timeout,
             )
             for i in range(self.n_clients)
         ]
@@ -259,6 +276,7 @@ class ClusterSpec:
             replicas=replicas,
             clients=clients,
             mm_coordinator=mm_coord,
+            sm_factory=self.sm_factory,
         )
         if self.auto_elect_leader:
             # Election only emits effects, so it is transport-agnostic;

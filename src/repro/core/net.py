@@ -69,6 +69,10 @@ class AsyncTransport:
         self._t0 = 0.0
         self._pending: List[Tuple[Address, Any, Optional[_AsyncTimer]]] = []
         self._egress_ready: Dict[Address, float] = {}
+        # Nemesis interposition point (nemesis.FaultPlane), identical to
+        # Simulator.faults — this is what gives the asyncio transport
+        # partitions, storms and heals with the same declarative schedules.
+        self.faults: Optional[Any] = None
         # telemetry (mirrors Simulator)
         self.messages_sent = 0
         self.messages_delivered = 0
@@ -95,6 +99,17 @@ class AsyncTransport:
     def recover(self, addr: Address) -> None:
         self.nodes[addr].recover()
 
+    def crash(self, addr: Address, *, clean: bool = False) -> None:
+        self.nodes[addr].crash(clean=clean)
+
+    def restart(self, addr: Address, *, wipe_volatile: bool = True) -> None:
+        self.nodes[addr].restart(wipe_volatile=wipe_volatile)
+
+    def call_at(self, when: float, fn: Callable[[], None]) -> None:
+        """Schedule a global (nemesis / scenario-script) callback at
+        transport time ``when`` (mirrors Simulator.call_at)."""
+        self._call_later(max(0.0, when - self.now), fn)
+
     # -- effect interpretation ----------------------------------------------
     def perform(self, src: Address, effect: Any) -> Optional[_AsyncTimer]:
         if isinstance(effect, Send):
@@ -116,6 +131,12 @@ class AsyncTransport:
         src_node = self.nodes.get(src)
         if src_node is not None and src_node.failed:
             return  # a crashed node sends nothing
+        extras = [0.0]
+        if self.faults is not None:
+            extras = self.faults.on_send(src, dst, msg, self.now, self.rng)
+            if extras is None:
+                self.messages_dropped += 1
+                return
         delays = plan_delivery(
             self.net, self.rng, src, dst, msg, self.now, self._egress_ready
         )
@@ -123,7 +144,10 @@ class AsyncTransport:
             self.messages_dropped += 1
             return
         for delay in delays:
-            self._call_later(delay, lambda m=msg: self._deliver(src, dst, m))
+            for extra in extras:
+                self._call_later(
+                    delay + extra, lambda m=msg: self._deliver(src, dst, m)
+                )
 
     def _deliver(self, src: Address, dst: Address, msg: Any) -> None:
         node = self.nodes.get(dst)
@@ -137,10 +161,15 @@ class AsyncTransport:
         self, src: Address, delay: float, fn: Callable[[], None]
     ) -> _AsyncTimer:
         t = _AsyncTimer()
+        node_at_arm = self.nodes.get(src)
+        armed_epoch = node_at_arm.life_epoch if node_at_arm is not None else 0
 
         def fire() -> None:
             node = self.nodes.get(src)
-            if t.cancelled or (node is not None and node.failed):
+            if t.cancelled or (
+                node is not None
+                and (node.failed or node.life_epoch != armed_epoch)
+            ):
                 return
             t.fired = True
             fn()

@@ -158,10 +158,38 @@ class Proposer(Node):
         self.last_heartbeat = 0.0
         self._hb_timer = None
         self._election_timer = None
+        self._election_cfg_provider: Optional[Callable[[], Configuration]] = None
 
         # --- telemetry ---
         self.reconfig_log: List[Dict[str, float]] = []
         self.stall_count = 0
+
+    # ------------------------------------------------------------------
+    # Crash/restart fault model (nemesis)
+    # ------------------------------------------------------------------
+    def reset_volatile(self) -> None:
+        """kill -9 semantics: leadership and in-flight round state live in
+        process memory and die with the process.  The chosen log does not
+        need to be persisted for safety — a recovering leader re-learns it
+        from the replicas/acceptors via Phase 1 — but leadership must never
+        silently survive a crash (the ex-leader would keep proposing in a
+        round a successor has already superseded without re-running
+        Phase 1)."""
+        self.is_leader = False
+        self.status = IDLE
+        self.match_ctx = None
+        self.p1_ctx = None
+        self.queued.clear()
+        self.recovered = True
+        if self._hb_timer is not None:
+            self._hb_timer.cancel()
+            self._hb_timer = None
+
+    def on_restart(self) -> None:
+        # Timers were suppressed while crashed; re-arm the election watch
+        # so a restarted follower can still take over a dead leader.
+        if self._election_cfg_provider is not None:
+            self.start_election_watch(self._election_cfg_provider)
 
     # ------------------------------------------------------------------
     # Leadership / round management
@@ -634,6 +662,9 @@ class Proposer(Node):
 
     def start_election_watch(self, config_provider: Callable[[], Configuration]) -> None:
         """Followers call this to auto-takeover on leader silence."""
+        self._election_cfg_provider = config_provider
+        if self._election_timer is not None:
+            self._election_timer.cancel()
 
         def check() -> None:
             if not self.is_leader and self.opt.auto_election:

@@ -165,9 +165,16 @@ class ProtocolNode:
         self.batch = batch if batch is not None and batch.enabled else None
         self._batch_buf: Dict[Address, List[Any]] = {}
         self._batch_timer: Optional[TimerHandle] = None
+        # Incremented on every crash(); transports capture it when a timer
+        # is armed and refuse to fire timers from a previous life, so a
+        # restarted node never runs pre-crash timer chains alongside the
+        # ones on_restart re-arms.
+        self.life_epoch = 0
         # telemetry
         self.unhandled_count = 0
         self.batches_sent = 0
+        self.crash_count = 0
+        self.restart_count = 0
 
     # -- lifecycle ---------------------------------------------------------
     def on_start(self) -> None:  # pragma: no cover - default no-op
@@ -186,6 +193,48 @@ class ProtocolNode:
 
     def recover(self) -> None:
         self.failed = False
+
+    # -- crash / restart (nemesis fault model) -----------------------------
+    def crash(self, *, clean: bool = False) -> None:
+        """Crash this node.
+
+        ``clean=True`` models an orderly shutdown (SIGTERM): buffered
+        hot-path batches are flushed onto the wire before the process
+        dies.  ``clean=False`` models ``kill -9``: in-flight effects that
+        were only buffered in process memory are lost with the process.
+        Either way the node stops sending, receiving and firing timers
+        until :meth:`restart`.
+        """
+        if self.failed:
+            return
+        if clean:
+            self.flush_batches()
+        self.fail()
+        self.life_epoch += 1  # every timer armed before this instant is dead
+        self.crash_count += 1
+
+    def restart(self, *, wipe_volatile: bool = True) -> None:
+        """Restart a crashed node from its persisted state.
+
+        Paxos roles persist their promises/votes/logs synchronously
+        before answering (the paper's crash-recovery assumption), so
+        those fields survive; ``wipe_volatile=True`` additionally drops
+        whatever a real process keeps only in memory (see each role's
+        :meth:`reset_volatile`).  A restarted node is live again and
+        ``on_restart`` lets roles re-arm their timers.
+        """
+        if wipe_volatile:
+            self.reset_volatile()
+        self.recover()
+        self.restart_count += 1
+        self.on_restart()
+
+    def reset_volatile(self) -> None:  # pragma: no cover - default no-op
+        """Drop state a real process would lose on kill -9 (overridden by
+        roles with volatile state, e.g. a proposer's leadership)."""
+
+    def on_restart(self) -> None:  # pragma: no cover - default no-op
+        """Hook for re-arming timers after a restart."""
 
     # -- dispatch ----------------------------------------------------------
     def on_message(self, src: Address, msg: Any) -> None:

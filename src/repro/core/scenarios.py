@@ -1,0 +1,484 @@
+"""Adversarial reconfiguration scenarios: nemesis schedules + live workloads.
+
+Each scenario composes a seeded :class:`nemesis.Schedule` with a live
+client workload against the paper's Section 8 topology and checks the
+full invariant suite (``nemesis.check_invariants``) after every injected
+event and once more at the end.  The same scenario/seed pair runs on the
+deterministic ``Simulator`` *and* on ``net.AsyncTransport`` — this is the
+PR-1 transport-parity test extended to faulty schedules: wall-clock
+scheduling makes the asyncio interleavings different, so parity under
+faults is *safety* parity (every invariant holds on both transports), not
+log equality.
+
+The catalog (paper sections each one stresses):
+
+  ====================================  =============================
+  scenario                              paper
+  ====================================  =============================
+  traffic_during_reconfig               Sections 4.3/4.4, 8 (Fig. 9)
+  leader_kill9_mid_phase2               Sections 3.4, 4.1 (takeover)
+  mm_reconfig_under_partition           Section 6
+  acceptor_swap_storm                   Sections 2.1, 4, 8.1
+  fast_paxos_recovery                   Section 7 (Algorithm 5)
+  gc_during_failover                    Section 5 (Scenarios 1-3)
+  ====================================  =============================
+
+Every failure raises :class:`ScenarioFailure` whose message leads with the
+one-line ``(seed, schedule)`` replay token; re-running
+``run_scenario(name, seed)`` regenerates a value-equal schedule and, on
+the simulator, a byte-for-byte identical event log.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .deploy import ClusterSpec
+from .fast_paxos import FastAcceptor, FastClient, FastCoordinator
+from .matchmaker import Matchmaker
+from .net import AsyncTransport
+from .nemesis import (
+    Crash,
+    Event,
+    Heal,
+    MMReconfigure,
+    Nemesis,
+    Partition,
+    ReconfigureRandom,
+    Restart,
+    Schedule,
+    StartClients,
+    StopClients,
+    Storm,
+    Takeover,
+)
+from .oracle import Oracle, SafetyViolation
+from .proposer import Options
+from .quorums import Configuration
+from .replica import KVStoreSM
+from .sim import NetworkConfig, Simulator
+
+
+class ScenarioFailure(AssertionError):
+    """A scenario-harness failure; the message leads with the replay tuple."""
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    seed: int
+    transport: str
+    replay: str                      # one-line (seed, schedule) token
+    event_log: List[str]
+    violations: List[str]
+    chosen_slots: int
+    completed_commands: int
+    steady_throughput: float = 0.0   # cmds/sec before the first fault
+    faulty_throughput: float = 0.0   # cmds/sec while the nemesis is active
+
+    @property
+    def safe(self) -> bool:
+        return not self.violations
+
+    def raise_if_unsafe(self) -> "ScenarioResult":
+        if self.violations:
+            raise ScenarioFailure(
+                f"REPLAY {self.replay}\n"
+                f"scenario {self.name!r} seed {self.seed} on {self.transport}: "
+                f"{len(self.violations)} invariant violation(s):\n  "
+                + "\n  ".join(self.violations)
+            )
+        return self
+
+
+@dataclass
+class _Scenario:
+    cluster: ClusterSpec
+    schedule: Schedule
+    net: NetworkConfig
+    horizon: float
+    # [t0, t1) windows for the throughput comparison
+    steady_window: Tuple[float, float]
+    faulty_window: Tuple[float, float]
+
+
+def _rng(name: str, seed: int) -> random.Random:
+    return random.Random(f"{name}:{seed}")
+
+
+def _jitter(rng: random.Random, t: float, spread: float = 0.02) -> float:
+    return t + rng.uniform(0.0, spread)
+
+
+# --------------------------------------------------------------------------
+# Scenario builders (standard Section 8 topology, f=1)
+# --------------------------------------------------------------------------
+def _base_cluster(n_clients: int = 2) -> ClusterSpec:
+    return ClusterSpec(
+        f=1,
+        n_clients=n_clients,
+        sm_factory=KVStoreSM,
+        client_retry_timeout=0.06,
+        options=Options(phase2_retry_timeout=0.05),
+    )
+
+
+def _kv_op_factory(client_index: int):
+    """Deterministic mixed set/get workload over a small key space, so the
+    linearizability check compares real (order-sensitive) results instead
+    of a constant 'ok'."""
+
+    def factory(n: int):
+        if n % 3 == 2:
+            return ("get", f"k{n % 5}")
+        return ("set", f"k{n % 5}", (client_index, n))
+
+    return factory
+
+
+def _all_addrs(spec: ClusterSpec) -> Tuple[str, ...]:
+    return (
+        spec.proposer_addrs()
+        + spec.acceptor_addrs()
+        + spec.matchmaker_addrs()
+        + spec.standby_matchmaker_addrs()
+        + spec.replica_addrs()
+        + ("mmcoord",)
+        + tuple(f"c{i}" for i in range(spec.n_clients))
+    )
+
+
+def _traffic_during_reconfig(seed: int) -> _Scenario:
+    """Pipelined command traffic while the leader swaps acceptor configs
+    (Optimizations 1/2: reconfiguration must not stall the hot path)."""
+    rng = _rng("traffic_during_reconfig", seed)
+    events = [Event(0.02, StartClients())]
+    for k in range(3):
+        events.append(Event(_jitter(rng, 0.08 + 0.1 * k), ReconfigureRandom()))
+    events.append(Event(0.45, StopClients()))
+    return _Scenario(
+        cluster=_base_cluster(),
+        schedule=Schedule("traffic_during_reconfig", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.6,
+        steady_window=(0.02, 0.08),
+        faulty_window=(0.08, 0.4),
+    )
+
+
+def _leader_kill9_mid_phase2(seed: int) -> _Scenario:
+    """kill -9 the leader while Phase 2 traffic is in flight; a follower
+    takes over (full Phase 1); the corpse restarts later — sometimes
+    without wiping volatile state, i.e. still believing it leads."""
+    rng = _rng("leader_kill9_mid_phase2", seed)
+    clean = rng.random() < 0.3
+    wipe = rng.random() < 0.7
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.1), Crash("p0", clean=clean)),
+        Event(_jitter(rng, 0.16), Takeover(1)),
+        Event(_jitter(rng, 0.3), Restart("p0", wipe_volatile=wipe)),
+        Event(0.45, StopClients()),
+    ]
+    return _Scenario(
+        cluster=_base_cluster(),
+        schedule=Schedule("leader_kill9_mid_phase2", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.6,
+        steady_window=(0.02, 0.1),
+        faulty_window=(0.1, 0.4),
+    )
+
+
+def _mm_reconfig_under_partition(seed: int) -> _Scenario:
+    """Section 6 matchmaker reconfiguration onto the standby set while a
+    partition cuts 1-2 old matchmakers (and sometimes the coordinator)
+    off; heals mid-protocol so retries finish the job."""
+    rng = _rng("mm_reconfig_under_partition", seed)
+    spec = _base_cluster()
+    mms = list(spec.matchmaker_addrs())
+    standby = spec.standby_matchmaker_addrs()
+    # The cut can hit old matchmakers or the reconfiguration coordinator
+    # itself (its retry timers must finish the job after the heal).
+    cut = tuple(rng.sample(mms + ["mmcoord"], rng.choice([1, 2])))
+    rest = tuple(a for a in _all_addrs(spec) if a not in cut)
+    symmetric = rng.random() < 0.7
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.06), Partition(cut, rest, symmetric=symmetric)),
+        Event(_jitter(rng, 0.1), MMReconfigure(standby)),
+        Event(_jitter(rng, 0.28), Heal()),
+        # Force a round change so the *new* matchmaker set actually serves
+        # a Matchmaking phase after the handover.
+        Event(_jitter(rng, 0.36), ReconfigureRandom()),
+        Event(0.5, StopClients()),
+    ]
+    return _Scenario(
+        cluster=spec,
+        schedule=Schedule("mm_reconfig_under_partition", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.65,
+        steady_window=(0.02, 0.06),
+        faulty_window=(0.06, 0.45),
+    )
+
+
+def _acceptor_swap_storm(seed: int) -> _Scenario:
+    """Acceptor reconfigurations under a message dup/drop/delay storm on
+    the acceptor pool — the asynchronous-model adversary of Section 2.1
+    aimed straight at the quorum traffic."""
+    rng = _rng("acceptor_swap_storm", seed)
+    spec = _base_cluster()
+    acc = spec.acceptor_addrs()
+    storm = Storm(
+        drop=rng.uniform(0.05, 0.2),
+        dup=rng.uniform(0.1, 0.3),
+        delay=rng.uniform(0.5e-3, 3e-3),
+        targets=acc,
+        tag="acceptor-storm",
+    )
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.06), storm),
+        Event(_jitter(rng, 0.12), ReconfigureRandom()),
+        Event(_jitter(rng, 0.22), ReconfigureRandom()),
+        Event(_jitter(rng, 0.34), Heal()),
+        Event(0.5, StopClients()),
+    ]
+    return _Scenario(
+        cluster=spec,
+        schedule=Schedule("acceptor_swap_storm", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.65,
+        steady_window=(0.02, 0.06),
+        faulty_window=(0.06, 0.45),
+    )
+
+
+def _gc_during_failover(seed: int) -> _Scenario:
+    """Garbage collection racing a leader failover: old configurations
+    are being retired (Scenarios 1-3) when the leader dies; the successor
+    must re-derive a consistent history and GC must never outrun the
+    f+1-replica durability bar."""
+    rng = _rng("gc_during_failover", seed)
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.06), ReconfigureRandom()),   # creates old configs
+        Event(_jitter(rng, 0.12), ReconfigureRandom()),   # + GC churn
+        Event(_jitter(rng, 0.16), Crash("p0", clean=False)),
+        Event(_jitter(rng, 0.22), Takeover(1)),
+        Event(_jitter(rng, 0.34), Restart("p0", wipe_volatile=True)),
+        Event(_jitter(rng, 0.4), ReconfigureRandom()),
+        Event(0.52, StopClients()),
+    ]
+    return _Scenario(
+        cluster=_base_cluster(),
+        schedule=Schedule("gc_during_failover", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.68,
+        steady_window=(0.02, 0.06),
+        faulty_window=(0.06, 0.5),
+    )
+
+
+_BUILDERS: Dict[str, Callable[[int], _Scenario]] = {
+    "traffic_during_reconfig": _traffic_during_reconfig,
+    "leader_kill9_mid_phase2": _leader_kill9_mid_phase2,
+    "mm_reconfig_under_partition": _mm_reconfig_under_partition,
+    "acceptor_swap_storm": _acceptor_swap_storm,
+    "gc_during_failover": _gc_during_failover,
+}
+
+SCENARIO_NAMES: Tuple[str, ...] = tuple(_BUILDERS) + ("fast_paxos_recovery",)
+
+
+# --------------------------------------------------------------------------
+# Runner
+# --------------------------------------------------------------------------
+def build_schedule(name: str, seed: int) -> Schedule:
+    """The declarative schedule for (name, seed) — the replay surface."""
+    if name == "fast_paxos_recovery":
+        return _fast_paxos_schedule(seed)
+    return _BUILDERS[name](seed).schedule
+
+
+def run_scenario(name: str, seed: int, *, transport: str = "sim") -> ScenarioResult:
+    """Run one adversarial scenario; returns the (unraised) result.
+
+    ``transport`` is ``"sim"`` (deterministic, byte-for-byte replayable)
+    or ``"async"`` (wall-clock asyncio; safety checks only).
+    """
+    if name == "fast_paxos_recovery":
+        return _run_fast_paxos(seed, transport)
+    sc = _BUILDERS[name](seed)
+    if transport == "sim":
+        t: Any = Simulator(seed=seed, net=sc.net)
+    elif transport == "async":
+        t = AsyncTransport(seed=seed, net=sc.net)
+    else:
+        raise ValueError(f"unknown transport {transport!r}")
+    dep = sc.cluster.instantiate(t)
+    for i, c in enumerate(dep.clients):
+        c.op_factory = _kv_op_factory(i)
+    nem = dep.attach_nemesis(sc.schedule)
+
+    violations: List[str] = []
+    try:
+        if transport == "sim":
+            t.run_until(sc.horizon)
+        else:
+            t.run(sc.horizon)
+    except SafetyViolation as exc:  # oracle raised mid-run
+        violations.append(f"oracle: {exc}")
+    violations.extend(nem.final_check())
+
+    lat = dep.latencies
+    s0, s1 = sc.steady_window
+    f0, f1 = sc.faulty_window
+    steady = len(lat(s0, s1)) / max(s1 - s0, 1e-9)
+    faulty = len(lat(f0, f1)) / max(f1 - f0, 1e-9)
+    return ScenarioResult(
+        name=name,
+        seed=seed,
+        transport=transport,
+        replay=nem.replay_line(),
+        event_log=list(nem.event_log),
+        violations=violations,
+        chosen_slots=len(dep.oracle.chosen),
+        completed_commands=sum(len(c.latencies) for c in dep.clients),
+        steady_throughput=steady,
+        faulty_throughput=faulty,
+    )
+
+
+# --------------------------------------------------------------------------
+# Fast Paxos coordinated recovery (Section 7) — its own topology
+# --------------------------------------------------------------------------
+def _fast_paxos_schedule(seed: int) -> Schedule:
+    rng = _rng("fast_paxos_recovery", seed)
+    acc = ("a0", "a1")
+    storm = Storm(
+        drop=rng.uniform(0.1, 0.3),
+        dup=rng.uniform(0.0, 0.2),
+        delay=rng.uniform(0.5e-3, 2e-3),
+        targets=acc,
+        tag="fast-storm",
+    )
+    return Schedule(
+        "fast_paxos_recovery",
+        seed,
+        (
+            Event(_jitter(rng, 0.005), storm),
+            Event(_jitter(rng, 0.12), Heal()),
+        ),
+    )
+
+
+class _FastDeps:
+    """Just enough deployment shape for Nemesis (no full invariants —
+    Fast Paxos here is single-decree with its own oracle check)."""
+
+    def __init__(self, sim: Any):
+        self.sim = sim
+
+
+def _run_fast_paxos(seed: int, transport: str) -> ScenarioResult:
+    """Two clients race values into f+1 fast acceptors under an acceptor
+    storm; the coordinator must recover conflicts into higher rounds and
+    at most one value may ever be chosen (Algorithm 5)."""
+    rng = _rng("fast_paxos_recovery", seed)
+    schedule = _fast_paxos_schedule(seed)
+    net = NetworkConfig()
+    if transport == "sim":
+        t: Any = Simulator(seed=seed, net=net)
+    elif transport == "async":
+        t = AsyncTransport(seed=seed, net=net)
+    else:
+        raise ValueError(f"unknown transport {transport!r}")
+
+    oracle = Oracle()
+    mms = [Matchmaker(f"mm{i}") for i in range(3)]
+    acc_addrs = ("a0", "a1")  # f+1 = 2 acceptors: the Section 7 headline
+    coord = FastCoordinator(
+        "coord",
+        0,
+        matchmakers=tuple(mm.addr for mm in mms),
+        oracle=oracle,
+        config_provider=lambda attempt: Configuration.fast_f_plus_1(
+            attempt, acc_addrs
+        ),
+        f=1,
+    )
+    accs = [FastAcceptor(a, learners=("coord",)) for a in acc_addrs]
+    clients = [FastClient(f"c{i}", acc_addrs, f"value{i}") for i in range(2)]
+    for n in [*mms, *accs, coord, *clients]:
+        t.register(n)
+
+    nem = Nemesis(_FastDeps(t), schedule, check=None).arm()
+    coord.start_round()
+    # Both clients race during the storm (likely conflict); after the heal
+    # one client keeps re-proposing so every coordinated-recovery round
+    # either adopts the surviving vote (unique V -> classic Phase 2) or
+    # gets a fresh fast-path value to choose.
+    for i, c in enumerate(clients):
+        t.call_at(0.004 + 0.002 * i, c.propose)
+    for k in range(12):
+        t.call_at(
+            0.15 + 0.04 * k + rng.uniform(0.0, 0.01),
+            lambda: clients[0].propose() if coord.chosen_value is None else None,
+        )
+
+    violations: List[str] = []
+    horizon = 2.0
+    try:
+        if transport == "sim":
+            t.run_until(horizon)
+        else:
+            t.run(0.8, until=lambda: coord.chosen_value is not None)
+    except SafetyViolation as exc:
+        violations.append(f"oracle: {exc}")
+
+    violations.extend(oracle.violations)
+    chosen = {repr(r.value) for r in oracle.chosen.values()}
+    if len(chosen) > 1:
+        violations.append(f"fast paxos chose two values: {sorted(chosen)}")
+    if transport == "sim" and coord.chosen_value is None:
+        violations.append("fast paxos: no value chosen after recovery horizon")
+    if coord.chosen_value is not None and repr(coord.chosen_value) not in (
+        chosen or {repr(coord.chosen_value)}
+    ):
+        violations.append(
+            f"coordinator learned {coord.chosen_value!r} but oracle saw {chosen}"
+        )
+    return ScenarioResult(
+        name="fast_paxos_recovery",
+        seed=seed,
+        transport=transport,
+        replay=nem.replay_line(),
+        event_log=list(nem.event_log),
+        violations=violations,
+        chosen_slots=len(oracle.chosen),
+        completed_commands=1 if coord.chosen_value is not None else 0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Matrix driver (tests, soak CI, benchmarks)
+# --------------------------------------------------------------------------
+def run_matrix(
+    names: Optional[Tuple[str, ...]] = None,
+    seeds: Tuple[int, ...] = tuple(range(10)),
+    *,
+    transport: str = "sim",
+    raise_on_violation: bool = True,
+) -> List[ScenarioResult]:
+    results = []
+    for name in names or SCENARIO_NAMES:
+        for seed in seeds:
+            res = run_scenario(name, seed, transport=transport)
+            if raise_on_violation:
+                res.raise_if_unsafe()
+            results.append(res)
+    return results

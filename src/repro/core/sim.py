@@ -130,6 +130,10 @@ class Simulator:
         self.nodes: Dict[Address, Node] = {}
         self._partitions: List[Tuple[Set[Address], Set[Address]]] = []
         self._egress_ready: Dict[Address, float] = {}
+        # Optional nemesis interposition point (nemesis.FaultPlane): every
+        # send is routed through it for partition / drop / dup / delay
+        # faults that can be installed and healed mid-run.
+        self.faults: Optional[Any] = None
         # telemetry
         self.messages_sent = 0
         self.messages_delivered = 0
@@ -178,9 +182,14 @@ class Simulator:
 
     def set_timer(self, node: Node, delay: float, fn: Callable[[], None]) -> Timer:
         t = Timer(self.now + delay)
+        armed_epoch = node.life_epoch
 
         def fire() -> None:
-            if t.cancelled or node.failed:
+            # Suppress cancelled timers, timers of a currently-crashed
+            # node, and timers armed in a previous life (crash() bumps
+            # life_epoch, so a restarted node never resurrects pre-crash
+            # timer chains next to the ones on_restart re-arms).
+            if t.cancelled or node.failed or node.life_epoch != armed_epoch:
                 return
             t.fired = True
             fn()
@@ -201,6 +210,12 @@ class Simulator:
         if self._partitioned(src, dst):
             self.messages_dropped += 1
             return
+        extras = [0.0]
+        if self.faults is not None:
+            extras = self.faults.on_send(src, dst, msg, self.now, self.rng)
+            if extras is None:
+                self.messages_dropped += 1
+                return
         delays = plan_delivery(
             self.net, self.rng, src, dst, msg, self.now, self._egress_ready
         )
@@ -208,7 +223,11 @@ class Simulator:
             self.messages_dropped += 1
             return
         for delay in delays:
-            self._push(self.now + delay, lambda m=msg: self._deliver(src, dst, m))
+            for extra in extras:
+                self._push(
+                    self.now + delay + extra,
+                    lambda m=msg: self._deliver(src, dst, m),
+                )
 
     def _deliver(self, src: Address, dst: Address, msg: Any) -> None:
         node = self.nodes.get(dst)
@@ -224,6 +243,13 @@ class Simulator:
 
     def recover(self, addr: Address) -> None:
         self.nodes[addr].recover()
+
+    def crash(self, addr: Address, *, clean: bool = False) -> None:
+        """Crash a node (clean=SIGTERM flushes batches, else kill -9)."""
+        self.nodes[addr].crash(clean=clean)
+
+    def restart(self, addr: Address, *, wipe_volatile: bool = True) -> None:
+        self.nodes[addr].restart(wipe_volatile=wipe_volatile)
 
     def step(self) -> bool:
         if not self._heap:

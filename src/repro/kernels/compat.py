@@ -1,0 +1,15 @@
+"""JAX version compatibility for the Pallas TPU kernels.
+
+The kernels are written against the current Pallas API, where TPU
+compiler options are ``pltpu.CompilerParams``.  Older jax releases
+(< 0.7) ship the same dataclass as ``pltpu.TPUCompilerParams``; resolve
+whichever exists at import time so the kernels lower on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)

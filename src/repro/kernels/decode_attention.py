@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 MASK = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
@@ -133,7 +135,7 @@ def decode_attention_bkh(
             pltpu.VMEM((q_per_kv, 128), jnp.float32),
             pltpu.VMEM((q_per_kv, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

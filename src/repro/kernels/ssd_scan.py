@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _ssd_chunk_kernel(
     x_ref,  # (1, 1, Q, hd)   x * dt
@@ -108,7 +110,7 @@ def ssd_intra_chunk(
             jax.ShapeDtypeStruct((BH, nC, N, hd), jnp.float32),
             jax.ShapeDtypeStruct((BH, nC, 1, Q), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

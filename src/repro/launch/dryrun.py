@@ -209,7 +209,10 @@ def run_cell(
     donate = (0,) if kind == "train" else ((1,) if kind == "decode" else ())
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    # jax < 0.7 has no jax.set_mesh; entering the Mesh object is the
+    # legacy spelling of the same ambient-mesh context.
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
         lowered = jax.jit(
             fn, out_shardings=out_shardings, donate_argnums=donate
         ).lower(*args)

@@ -14,8 +14,13 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    # jax < 0.7 has neither sharding.AxisType nor the axis_types kwarg;
+    # Auto is the default there, so plain make_mesh is equivalent.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes)
     )
 
 

@@ -7,6 +7,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 SCRIPT = textwrap.dedent(
     """
     import os
@@ -48,6 +50,7 @@ SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow  # ~20s subprocess XLA compile; nightly + full runs
 def test_elastic_training_on_8_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

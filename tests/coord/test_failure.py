@@ -1,0 +1,144 @@
+"""Heartbeat failure detection: transport-level evidence, not flags.
+
+The detector must (a) suspect a pod only on *confirmed* silence —
+``confirm_misses`` consecutive probe rounds past the timeout — so a
+transient partition never triggers a reconfiguration (partitioned !=
+dead); (b) withdraw suspicion the moment a Pong returns; and (c) drive
+real ``ClusterController.reconfigure`` calls when the nemesis actually
+kills a pod's acceptors at the transport layer.
+"""
+
+from repro.core import FaultPlane, Simulator
+from repro.core.acceptor import Acceptor
+from repro.coord.control_plane import ClusterController
+from repro.coord.failure import FailureDetector
+
+
+def _detector_rig(*, confirm_misses=2, suspect_after=0.1, ping_interval=0.05):
+    sim = Simulator(seed=0)
+    acc = sim.register(Acceptor("pod0/acc0"))
+    events = {"suspect": [], "recover": []}
+    det = FailureDetector(
+        "det",
+        {"pod0": ("pod0/acc0",)},
+        ping_interval=ping_interval,
+        suspect_after=suspect_after,
+        confirm_misses=confirm_misses,
+        on_suspect=events["suspect"].append,
+        on_recover=events["recover"].append,
+    )
+    sim.register(det)
+    return sim, acc, det, events
+
+
+def test_healthy_pod_never_suspected():
+    sim, _, det, events = _detector_rig()
+    sim.run_for(1.0)
+    assert not det.suspected and events["suspect"] == []
+
+
+def test_transport_level_crash_is_suspected_and_restart_clears():
+    sim, acc, det, events = _detector_rig()
+    sim.run_for(0.3)
+    sim.crash("pod0/acc0", clean=False)  # a real kill, not a flag
+    sim.run_for(0.5)
+    assert det.suspected == {"pod0"} and events["suspect"] == ["pod0"]
+    sim.restart("pod0/acc0")
+    sim.run_for(0.3)
+    assert not det.suspected and events["recover"] == ["pod0"]
+
+
+def test_short_partition_is_not_suspected():
+    """A partition shorter than the confirmation window must not produce
+    a suspicion: node partitioned != node dead."""
+    sim, _, det, events = _detector_rig(confirm_misses=3)
+    plane = FaultPlane()
+    sim.faults = plane
+    sim.run_for(0.2)
+    plane.partition(["det"], ["pod0/acc0"])
+    sim.run_for(0.12)  # one probe round past the timeout, below confirm
+    plane.heal()
+    sim.run_for(0.5)
+    assert not det.suspected and events["suspect"] == []
+    assert det.false_positive_guard_hits > 0  # the guard actually engaged
+
+
+def test_long_partition_suspects_then_heal_unsuspects():
+    sim, _, det, events = _detector_rig()
+    plane = FaultPlane()
+    sim.faults = plane
+    sim.run_for(0.2)
+    plane.partition(["det"], ["pod0/acc0"])
+    sim.run_for(0.6)
+    assert det.suspected == {"pod0"}  # confirmed silence looks dead...
+    plane.heal()
+    sim.run_for(0.3)
+    assert not det.suspected  # ...but the first Pong retracts it
+    assert events["recover"] == ["pod0"]
+
+
+def test_detector_registered_late_gets_grace():
+    """last_seen must be seeded from registration time: a detector that
+    starts at t > suspect_after must not instantly suspect everything."""
+    sim = Simulator(seed=0)
+    sim.register(Acceptor("pod0/acc0"))
+    sim.run_for(5.0)  # the cluster is old; the detector is new
+    det = FailureDetector("det", {"pod0": ("pod0/acc0",)}, suspect_after=0.1)
+    sim.register(det)
+    sim.run_for(0.04)  # before the first pong could even return... no wait
+    assert not det.suspected
+
+
+def test_controller_failover_driven_by_transport_kill():
+    """End to end: the nemesis kills a pod's acceptors at the transport,
+    the detector confirms, and the controller reconfigures onto a spare —
+    the Section 8.1 'replace failed acceptors' flow with no synthetic
+    fail_pod call in the loop."""
+    ctrl = ClusterController(["podA", "podB", "podC"], seed=0)
+    ctrl.attach_detector(spares=["podD"])
+    ctrl.sim.run_for(0.3)
+    assert ctrl.failover_log == []
+    for addr in ctrl.pods["podB"].acceptor_addrs:
+        ctrl.sim.crash(addr, clean=False)  # transport-level kill
+    ctrl.sim.run_for(1.0)
+    assert [e["suspected"] for e in ctrl.failover_log] == ["podB"]
+    assert ctrl.failover_log[0]["replacement"] == "podD"
+    assert set(ctrl.epoch_pods) == {"podA", "podC", "podD"}
+    epoch, pods = ctrl.membership()
+    assert set(pods) == {"podA", "podC", "podD"}
+    ctrl.check_safety()
+
+
+def test_second_failover_after_replacement_is_detected():
+    """The promoted spare joins the watch set: a failure AFTER the first
+    failover must be detected and replaced too (regression: the detector
+    used to go blind after its first reconfigure)."""
+    ctrl = ClusterController(["podA", "podB", "podC"], seed=2)
+    ctrl.attach_detector(spares=["podD", "podE"])
+    ctrl.sim.run_for(0.3)
+    for addr in ctrl.pods["podB"].acceptor_addrs:
+        ctrl.sim.crash(addr, clean=False)
+    ctrl.sim.run_for(1.0)
+    assert set(ctrl.epoch_pods) == {"podA", "podC", "podD"}
+    assert "podD" in ctrl.detector.targets  # the spare is being probed
+    for addr in ctrl.pods["podD"].acceptor_addrs:
+        ctrl.sim.crash(addr, clean=False)  # now kill the replacement
+    ctrl.sim.run_for(1.0)
+    assert [e["suspected"] for e in ctrl.failover_log] == ["podB", "podD"]
+    assert set(ctrl.epoch_pods) == {"podA", "podC", "podE"}
+    ctrl.check_safety()
+
+
+def test_partition_does_not_trigger_controller_failover():
+    ctrl = ClusterController(["podA", "podB", "podC"], seed=1)
+    det = ctrl.attach_detector(spares=["podD"], confirm_misses=4)
+    plane = FaultPlane()
+    ctrl.sim.faults = plane
+    ctrl.sim.run_for(0.3)
+    plane.partition(["detector"], list(ctrl.pods["podB"].acceptor_addrs))
+    ctrl.sim.run_for(0.12)  # shorter than the confirmation window
+    plane.heal()
+    ctrl.sim.run_for(0.5)
+    assert ctrl.failover_log == []
+    assert set(ctrl.epoch_pods) == {"podA", "podB", "podC"}
+    assert not det.suspected

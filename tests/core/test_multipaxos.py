@@ -151,6 +151,7 @@ def test_simultaneous_leader_acceptor_matchmaker_failure():
     assert len(d.oracle.chosen) > n_mid  # still making progress
 
 
+@pytest.mark.slow  # nemesis scenario matrix covers this ground per-push
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 5000), drop=st.sampled_from([0.0, 0.02]))
 def test_property_reconfig_storm_safety(seed, drop):

@@ -1,0 +1,245 @@
+"""Nemesis layer unit tests: crash modes, restart semantics, FaultPlane.
+
+The scenario-level coverage lives in tests/core/test_scenarios.py; this
+file pins the *mechanics* the scenarios rely on:
+
+  * clean crash (SIGTERM) flushes buffered hot-path batches, kill -9
+    drops them;
+  * restart-from-persisted-state keeps acceptor promises/votes and
+    matchmaker logs, wipes a proposer's volatile leadership;
+  * FaultPlane partitions (symmetric and asymmetric) and storms behave
+    identically through both transports' interposition points;
+  * schedules are deterministic values: same (name, seed) -> equal
+    schedule, same run -> byte-for-byte identical event log.
+"""
+
+import random
+
+from repro.core import (
+    BatchPolicy,
+    Crash,
+    FaultPlane,
+    Heal,
+    NetworkConfig,
+    Partition,
+    ProtocolNode,
+    Restart,
+    Simulator,
+    Storm,
+    build,
+)
+from repro.core import messages as m
+from repro.core.nemesis import Event, Schedule, check_invariants
+from repro.core.rounds import NEG_INF, Round
+from repro.core.scenarios import build_schedule
+
+
+# --------------------------------------------------------------------------
+# Crash modes
+# --------------------------------------------------------------------------
+def _batching_node(sim):
+    node = sim.register(
+        ProtocolNode("n0", batch=BatchPolicy(max_batch=8, flush_interval=1e-3))
+    )
+    sim.register(ProtocolNode("r0"))
+    return node
+
+
+def test_clean_crash_flushes_buffered_batches():
+    sim = Simulator(seed=0)
+    node = _batching_node(sim)
+    node.send("r0", m.Chosen(slot=0, value="v"))  # buffered
+    sim.crash("n0", clean=True)  # SIGTERM: flush, then die
+    sim.run_for(0.01)
+    assert sim.messages_delivered == 1
+    assert node.failed and node.crash_count == 1
+
+
+def test_kill9_drops_buffered_batches():
+    sim = Simulator(seed=0)
+    node = _batching_node(sim)
+    node.send("r0", m.Chosen(slot=0, value="v"))  # buffered
+    sim.crash("n0", clean=False)  # kill -9: the buffer dies with us
+    sim.run_for(0.01)
+    assert sim.messages_delivered == 0
+    assert node.failed
+
+
+def test_crashed_node_neither_sends_nor_receives_until_restart():
+    sim = Simulator(seed=0)
+    d = build(f=1, n_clients=1, seed=0)
+    acc = d.acceptors[0]
+    sim = d.sim
+    sim.crash(acc.addr, clean=False)
+    before = acc.phase1_count
+    d.leader.broadcast([acc.addr], m.Phase1A(round=Round(5, 0, 0)))
+    sim.run_for(0.01)
+    assert acc.phase1_count == before
+    sim.restart(acc.addr)
+    d.leader.broadcast([acc.addr], m.Phase1A(round=Round(6, 0, 0)))
+    sim.run_for(0.01)
+    assert acc.phase1_count == before + 1
+
+
+def test_restart_does_not_resurrect_pre_crash_timer_chains():
+    """A timer armed before a crash must never fire after the restart:
+    otherwise every self-re-arming chain (client retries, detector
+    probes, heartbeats) runs twice after a crash/restart cycle."""
+
+    class Ticker(ProtocolNode):
+        def __init__(self, addr):
+            super().__init__(addr)
+            self.tick_times = []
+
+        def on_start(self):
+            self._arm()
+
+        def on_restart(self):
+            self._arm()
+
+        def _arm(self):
+            self.tick_times.append(self.now)
+            self.set_timer(0.1, self._arm)
+
+    sim = Simulator(seed=0)
+    n = sim.register(Ticker("n0"))
+    sim.run_for(0.35)
+    assert len(n.tick_times) == 4  # t = 0, 0.1, 0.2, 0.3
+    sim.crash("n0", clean=False)  # a pre-crash fire is pending at t=0.4
+    sim.restart("n0")  # on_restart arms a fresh chain at t=0.35
+    sim.run_for(1.0)
+    post = [t for t in n.tick_times if t >= 0.35]
+    # A single chain ticks every 0.1; a resurrected second chain would
+    # interleave with sub-0.1 gaps.
+    gaps = [b - a for a, b in zip(post, post[1:])]
+    assert post and all(abs(g - 0.1) < 1e-9 for g in gaps), gaps
+
+
+# --------------------------------------------------------------------------
+# Restart-from-persisted-state semantics
+# --------------------------------------------------------------------------
+def test_acceptor_promises_survive_kill9_restart():
+    """Paxos safety hinges on promises/votes being synchronously durable:
+    a restarted acceptor must still nack rounds below its promise."""
+    d = build(f=1, n_clients=1, seed=0)
+    d.start_clients()
+    d.sim.run_for(0.05)
+    d.stop_clients()
+    d.sim.run_for(0.01)
+    acc = next(a for a in d.acceptors if a.round != NEG_INF and a.votes)
+    promised, votes = acc.round, dict(acc.votes)
+    d.sim.crash(acc.addr, clean=False)
+    d.sim.restart(acc.addr, wipe_volatile=True)
+    assert acc.round == promised and acc.votes == votes
+
+
+def test_proposer_leadership_is_volatile_across_kill9_restart():
+    d = build(f=1, n_clients=1, seed=0)
+    leader = d.leader
+    assert leader.is_leader
+    d.sim.crash(leader.addr, clean=False)
+    d.sim.restart(leader.addr, wipe_volatile=True)
+    assert not leader.is_leader and leader.status == "IDLE"
+    assert leader.restart_count == 1
+
+
+def test_restart_without_wipe_keeps_stale_leadership_but_rounds_fence_it():
+    """A leader restarting with volatile state intact (e.g. a paused VM)
+    still believes it leads; a successor's higher round must fence its
+    proposals via nacks, and safety must hold."""
+    d = build(f=1, n_clients=1, seed=3)
+    sim = d.sim
+    p0, p1 = d.proposers
+    sim.crash("p0", clean=False)
+    p1.become_leader(d.random_config())
+    sim.run_for(0.05)
+    assert p1.is_leader
+    sim.restart("p0", wipe_volatile=False)
+    assert p0.is_leader  # stale belief
+    d.start_clients()
+    sim.run_for(0.3)
+    d.stop_clients()
+    sim.run_for(0.05)
+    assert not p0.is_leader  # nacks from p1's round forced a step-down
+    d.check_all()
+    assert not check_invariants(d)
+
+
+# --------------------------------------------------------------------------
+# FaultPlane
+# --------------------------------------------------------------------------
+def test_fault_plane_symmetric_and_asymmetric_partitions():
+    plane = FaultPlane()
+    rng = random.Random(0)
+    plane.partition(["a"], ["b"], symmetric=False)
+    assert plane.on_send("a", "b", None, 0.0, rng) is None
+    assert plane.on_send("b", "a", None, 0.0, rng) == [0.0]
+    plane.heal()
+    plane.partition(["a"], ["b"], symmetric=True)
+    assert plane.on_send("a", "b", None, 0.0, rng) is None
+    assert plane.on_send("b", "a", None, 0.0, rng) is None
+    assert plane.on_send("a", "c", None, 0.0, rng) == [0.0]
+    plane.heal()
+    assert plane.on_send("a", "b", None, 0.0, rng) == [0.0]
+
+
+def test_fault_plane_storm_scoping_drop_dup_delay():
+    plane = FaultPlane()
+    plane.add_storm(Storm(drop=1.0, targets=("x",)))
+    rng = random.Random(0)
+    assert plane.on_send("x", "y", None, 0.0, rng) is None
+    assert plane.on_send("y", "x", None, 0.0, rng) is None
+    assert plane.on_send("y", "z", None, 0.0, rng) == [0.0]  # out of scope
+    plane.heal()
+    plane.add_storm(Storm(dup=1.0, delay=1e-3))
+    extras = plane.on_send("a", "b", None, 0.0, rng)
+    assert len(extras) == 2 and extras[1] > extras[0] >= 1e-9
+    plane.end_storm("storm")
+    assert plane.on_send("a", "b", None, 0.0, rng) == [0.0]
+
+
+def test_fault_plane_applies_through_simulator_send():
+    sim = Simulator(seed=0)
+    a = sim.register(ProtocolNode("a"))
+    sim.register(ProtocolNode("b"))
+    plane = FaultPlane()
+    sim.faults = plane
+    plane.partition(["a"], ["b"])
+    a.send("b", m.Ping(1))
+    sim.run_for(0.01)
+    assert sim.messages_delivered == 0 and plane.dropped_by_partition == 1
+    plane.heal()
+    a.send("b", m.Ping(2))
+    sim.run_for(0.01)
+    assert sim.messages_delivered == 1
+
+
+# --------------------------------------------------------------------------
+# Deterministic schedules + event logs
+# --------------------------------------------------------------------------
+def test_schedules_are_value_equal_across_regeneration():
+    for name in ("leader_kill9_mid_phase2", "acceptor_swap_storm"):
+        s1, s2 = build_schedule(name, 7), build_schedule(name, 7)
+        assert s1 == s2 and repr(s1) == repr(s2)
+        assert build_schedule(name, 8) != s1
+
+
+def test_nemesis_event_log_applies_in_order():
+    d = build(f=1, n_clients=0, seed=0, auto_elect_leader=False)
+    sched = Schedule(
+        "unit", 0,
+        (
+            Event(0.01, Partition(("a0",), ("p0",))),
+            Event(0.02, Heal()),
+            Event(0.03, Crash("a0", clean=False)),
+            Event(0.04, Restart("a0")),
+        ),
+    )
+    nem = d.attach_nemesis(sched, check=None)
+    d.sim.run_for(0.05)
+    assert nem.applied == 4
+    assert [l.split()[0] for l in nem.event_log] == [
+        "t=0.010000", "t=0.020000", "t=0.030000", "t=0.040000",
+    ]
+    assert not nem.plane.active
+    assert not d.acceptors[0].failed

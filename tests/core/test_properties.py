@@ -1,0 +1,146 @@
+"""Property-based tests for round arithmetic and quorum intersection.
+
+These are the two algebraic foundations the nemesis invariant checker
+leans on: consensus safety reduces to (a) rounds forming a total order
+with NEG_INF as the least element and proposer-owned successors, and
+(b) every Phase-1 quorum intersecting every Phase-2 quorum in every
+configuration the matchmakers ever hand out (Section 2.3).
+
+Runs under real hypothesis when installed; under the deterministic
+example-based stub (tests/_hypothesis_stub.py) otherwise.
+"""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quorums import Configuration, QuorumSpec
+from repro.core.rounds import NEG_INF, Round, initial_round, max_round
+
+# Raw (r, proposer, s) tuples; Round is built inside each property so the
+# same strategies work under real hypothesis and the deterministic stub.
+round_tuples = st.tuples(st.integers(0, 5), st.integers(0, 3), st.integers(0, 5))
+
+
+def _r(t) -> Round:
+    return Round(*t)
+
+
+# --------------------------------------------------------------------------
+# Round algebra
+# --------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(a=round_tuples, b=round_tuples, c=round_tuples)
+def test_round_total_order(a, b, c):
+    ra, rb, rc = _r(a), _r(b), _r(c)
+    # totality: exactly one of <, ==, > holds
+    assert (ra < rb) + (ra == rb) + (rb < ra) == 1
+    # transitivity
+    if ra < rb and rb < rc:
+        assert ra < rc
+    # lexicographic agreement
+    assert (ra < rb) == (ra.key() < rb.key())
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=round_tuples)
+def test_neg_inf_is_strict_minimum(t):
+    r = _r(t)
+    assert NEG_INF < r and not (r < NEG_INF)
+    assert NEG_INF <= r and r >= NEG_INF
+    assert NEG_INF != r
+    assert max_round(NEG_INF, r) == r and max_round(r, NEG_INF) == r
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=round_tuples, pid=st.integers(0, 3))
+def test_round_successors(t, pid):
+    r = _r(t)
+    # next_s: strictly larger, same owner — the stable-leader
+    # reconfiguration bump (Phase-1 bypassing applies).
+    s = r.next_s()
+    assert r < s and s.proposer == r.proposer and s.r == r.r
+    # next_r: strictly larger than ANY same-r round regardless of s —
+    # the takeover bump.
+    nr = r.next_r(pid)
+    assert r < nr and nr.proposer == pid
+    assert Round(r.r, r.proposer, r.s + 1000) < nr
+    # ownership: nobody else's next_s collides with ours
+    assert s != nr
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=round_tuples, b=round_tuples)
+def test_max_round_is_commutative_lub(a, b):
+    ra, rb = _r(a), _r(b)
+    m = max_round(ra, rb)
+    assert m in (ra, rb)
+    assert m >= ra and m >= rb
+    assert max_round(rb, ra) == m
+    assert initial_round(0) <= max_round(initial_round(0), m)
+
+
+# --------------------------------------------------------------------------
+# Quorum intersection
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(n_over_2f=st.integers(1, 3), cid=st.integers(1, 99))
+def test_majority_configs_intersect(n_over_2f, cid):
+    f = n_over_2f
+    acc = [f"a{i}" for i in range(2 * f + 1)]
+    cfg = Configuration.majority(cid, acc)
+    assert cfg.validate_intersection()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 6), p1=st.integers(1, 6), p2=st.integers(1, 6))
+def test_flexible_configs_intersect_iff_p1_p2_exceed_n(n, p1, p2):
+    acc = [f"a{i}" for i in range(n)]
+    p1, p2 = min(p1, n), min(p2, n)
+    if p1 + p2 > n:
+        cfg = Configuration.flexible(7, acc, p1, p2)
+        assert cfg.validate_intersection()
+    else:
+        # the constructor must refuse non-intersecting quorum systems
+        try:
+            Configuration.flexible(7, acc, p1, p2)
+            raised = False
+        except AssertionError:
+            raised = True
+        assert raised
+
+
+@settings(max_examples=20, deadline=None)
+@given(f=st.integers(1, 4))
+def test_fast_f_plus_1_configs_intersect(f):
+    acc = [f"a{i}" for i in range(f + 1)]
+    cfg = Configuration.fast_f_plus_1(9, acc)
+    # singleton P1 quorums x unanimous P2: every pair intersects
+    assert cfg.validate_intersection()
+    assert cfg.phase2.min_size() == f + 1 and cfg.phase1.min_size() == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 3), cols=st.integers(1, 3))
+def test_grid_configs_intersect(rows, cols):
+    grid = [[f"a{r}_{c}" for c in range(cols)] for r in range(rows)]
+    cfg = Configuration.grid(11, grid)
+    assert cfg.validate_intersection()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    thresh=st.integers(1, 6),
+    acks=st.lists(st.integers(0, 9), min_size=0, max_size=12),
+)
+def test_quorum_check_monotone_and_bounded(n, thresh, acks):
+    members = tuple(f"a{i}" for i in range(n))
+    spec = QuorumSpec(members, threshold=min(thresh, n))
+    named = [f"a{i % max(n, 1)}" for i in acks]
+    distinct = set(named) & set(members)
+    assert spec.is_quorum(named) == (len(distinct) >= spec.threshold)
+    # monotonicity: adding acks never un-forms a quorum
+    if spec.is_quorum(named):
+        assert spec.is_quorum(list(named) + [members[0]])
+    # outsiders never count
+    assert spec.is_quorum(["z1", "z2", "z3"]) == (spec.threshold == 0)

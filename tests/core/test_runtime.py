@@ -220,6 +220,7 @@ def test_batching_preserves_at_most_once_under_dup_and_reorder():
     assert any(n.batches_sent > 0 for n in d.sim.nodes.values())
 
 
+@pytest.mark.slow  # ~12s two full curve anchors; nightly + full runs
 def test_batching_throughput_beats_unbatched():
     """Simulated commands/sec with batch_max=16 >= 2x batch_max=1 (the
     acceptance anchor; the full curve lives in benchmarks/bench_batching)."""

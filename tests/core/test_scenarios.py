@@ -1,0 +1,127 @@
+"""Adversarial reconfiguration scenarios: the full matrix, both transports.
+
+Acceptance criteria of the nemesis PR:
+
+  * >= 6 distinct adversarial scenarios (command traffic concurrent with
+    reconfiguration, leader kill -9 mid-Phase-2, matchmaker
+    reconfiguration under partition, acceptor swap under a dup/drop
+    storm, Fast Paxos coordinated recovery, GC racing a failover);
+  * >= 10 seeds each on the deterministic simulator, plus the same
+    scenarios on net.AsyncTransport (safety parity under faults — the
+    PR-1 parity test extended to faulty schedules);
+  * every run passes the invariant checker (one value per slot, replica
+    prefix consistency, linearizable client results, GC durability);
+  * any failure prints its one-line (seed, schedule) replay tuple, and
+    the same tuple reproduces a byte-for-byte identical event log.
+
+The quick matrix (3 seeds) runs in tier-1; the long tail (seeds 3..9 and
+the async sweep) is marked ``slow`` and runs in the nemesis-soak CI job,
+where ``NEMESIS_SOAK_SEEDS`` widens it to 20 seeds.
+"""
+
+import os
+
+import pytest
+
+from repro.core import SCENARIO_NAMES, run_scenario
+from repro.core.scenarios import ScenarioFailure, build_schedule
+
+QUICK_SEEDS = tuple(range(2))
+SOAK_SEEDS = tuple(range(2, int(os.environ.get("NEMESIS_SOAK_SEEDS", "10"))))
+
+
+def test_catalog_has_at_least_six_scenarios():
+    assert len(SCENARIO_NAMES) >= 6
+    assert len(set(SCENARIO_NAMES)) == len(SCENARIO_NAMES)
+
+
+# --------------------------------------------------------------------------
+# Simulator matrix
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", QUICK_SEEDS)
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_scenario_sim_quick(name, seed):
+    res = run_scenario(name, seed, transport="sim").raise_if_unsafe()
+    if name != "fast_paxos_recovery":
+        # liveness floor: traffic kept flowing despite the adversary
+        assert res.chosen_slots > 50, (res.replay, res.chosen_slots)
+    else:
+        assert res.chosen_slots == 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", SOAK_SEEDS)
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_scenario_sim_soak(name, seed):
+    run_scenario(name, seed, transport="sim").raise_if_unsafe()
+
+
+# --------------------------------------------------------------------------
+# AsyncTransport parity under faults (safety parity, not log equality:
+# wall-clock scheduling makes the interleavings different by design)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_scenario_async_parity_quick(name):
+    run_scenario(name, 0, transport="async").raise_if_unsafe()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", tuple(range(1, 10)))
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_scenario_async_parity_soak(name, seed):
+    run_scenario(name, seed, transport="async").raise_if_unsafe()
+
+
+# --------------------------------------------------------------------------
+# Seeded replay: the (seed, schedule) tuple IS the reproduction
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name",
+    # one traffic/reconfig, one crash/restart, one separate-topology run;
+    # the remaining three replay in the slow tier (…_soak below)
+    ("traffic_during_reconfig", "leader_kill9_mid_phase2", "fast_paxos_recovery"),
+)
+def test_seeded_replay_is_byte_for_byte(name):
+    """Same (name, seed): value-equal schedule, byte-identical event log,
+    identical chosen log and client completions."""
+    a = run_scenario(name, 5, transport="sim")
+    b = run_scenario(name, 5, transport="sim")
+    assert build_schedule(name, 5) == build_schedule(name, 5)
+    assert "\n".join(a.event_log) == "\n".join(b.event_log)
+    assert a.chosen_slots == b.chosen_slots
+    assert a.completed_commands == b.completed_commands
+    assert a.replay == b.replay
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "name",
+    ("mm_reconfig_under_partition", "acceptor_swap_storm", "gc_during_failover"),
+)
+def test_seeded_replay_is_byte_for_byte_soak(name):
+    a = run_scenario(name, 5, transport="sim")
+    b = run_scenario(name, 5, transport="sim")
+    assert "\n".join(a.event_log) == "\n".join(b.event_log)
+    assert (a.chosen_slots, a.completed_commands) == (
+        b.chosen_slots,
+        b.completed_commands,
+    )
+
+
+def test_failure_message_carries_replay_tuple():
+    """Any harness failure must lead with the one-line reproduction token."""
+    res = run_scenario("leader_kill9_mid_phase2", 0, transport="sim")
+    res.violations = ["synthetic violation for the error-path test"]
+    with pytest.raises(ScenarioFailure) as exc:
+        res.raise_if_unsafe()
+    msg = str(exc.value)
+    assert msg.startswith("REPLAY (seed=0, schedule=Schedule(")
+    assert "leader_kill9_mid_phase2" in msg
+    # the replay token round-trips: it names the exact schedule value
+    assert repr(build_schedule("leader_kill9_mid_phase2", 0)) in msg
+
+
+def test_throughput_fields_populated():
+    res = run_scenario("traffic_during_reconfig", 0, transport="sim")
+    assert res.steady_throughput > 0
+    assert res.faulty_throughput > 0
