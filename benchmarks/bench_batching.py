@@ -39,8 +39,13 @@ def run_one(
     duration: float = 0.4,
     window: int = WINDOW,
     overhead: float = PER_MSG_OVERHEAD,
+    adaptive: bool = False,
 ) -> Dict[str, float]:
-    opts = Options(batch_max=batch_max, batch_flush_interval=FLUSH_INTERVAL)
+    opts = Options(
+        batch_max=batch_max,
+        batch_flush_interval=FLUSH_INTERVAL,
+        batch_flush_adaptive=adaptive,
+    )
     spec = ClusterSpec(f=1, n_clients=0, options=opts, auto_elect_leader=False)
     sim = Simulator(seed=seed, net=NetworkConfig(per_msg_overhead=overhead))
     dep = spec.instantiate(sim)
@@ -62,6 +67,7 @@ def run_one(
     lat = Deployment.summary([l for (_, l) in client.latencies])
     return {
         "batch_max": batch_max,
+        "adaptive_flush": adaptive,
         "commands_per_sec": client.completed / duration,
         "completed": client.completed,
         "wire_messages": sim.messages_sent,
@@ -83,6 +89,23 @@ def main(fast: bool = True) -> List[Dict[str, float]]:
     base = curve[0]["commands_per_sec"]
     for row in curve:
         row["speedup_vs_unbatched"] = row["commands_per_sec"] / base if base else 0.0
+    # Adaptive (flush-on-quiescence) sweep: the latency/throughput
+    # tradeoff vs the fixed flush interval — partial buffers drain as
+    # soon as the causal burst ends instead of waiting out the timer.
+    adaptive_curve = []
+    for b in BATCH_SIZES:
+        row = run_one(b, duration=duration, adaptive=True)
+        row["speedup_vs_unbatched"] = (
+            row["commands_per_sec"] / base if base else 0.0
+        )
+        fixed = next(r for r in curve if r["batch_max"] == b)
+        row["latency_vs_fixed"] = (
+            row["median_latency_ms"] / fixed["median_latency_ms"]
+            if fixed["median_latency_ms"]
+            else 0.0
+        )
+        adaptive_curve.append(row)
+        common.record("batching_adaptive", **row)
     out = os.environ.get("BENCH_BATCHING_JSON", "BENCH_batching.json")
     with open(out, "w") as fh:
         json.dump(
@@ -95,6 +118,7 @@ def main(fast: bool = True) -> List[Dict[str, float]]:
                     "duration_s": duration,
                 },
                 "curve": curve,
+                "adaptive_curve": adaptive_curve,
             },
             fh,
             indent=2,

@@ -1,0 +1,143 @@
+"""Sharded log plane: simulated commands/sec vs shard count.
+
+The single-leader throughput ceiling (the paper's Section 8 deployments
+are all single-leader) is the leader's egress serialization: every
+command costs the leader a Phase2A fan-out plus a Chosen broadcast, and
+with a per-wire-message sender overhead the leader saturates first.  The
+sharded log plane (core/log.py) stride-partitions the slot space across
+independent Matchmaker Paxos instances, so the per-command leader work
+spreads across ``num_shards`` leaders while the replicas execute the
+interleaved streams in slot order.
+
+This benchmark sweeps shard count at a fixed hot-path batch size
+(16, the bench_batching anchor) with pipelined clients routing
+client-side (``shard_of_command``), and reports the throughput curve.
+
+Acceptance anchor: 4 shards must be >= 2x 1 shard at batch 16.
+
+Emits ``BENCH_sharding.json``.  ``--smoke`` runs a shortened sweep (CI).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.core import ClusterSpec, NetworkConfig, PipelinedClient, Simulator
+from repro.core.client import shard_of_command
+from repro.core.deploy import Deployment
+from repro.core.proposer import Options
+
+from . import common
+
+SHARD_COUNTS = (1, 2, 4, 8)
+BATCH_MAX = 16
+# The pipeline must be deep enough that throughput is egress-bound, not
+# latency-bound: with ~1024 commands in flight the single leader pins at
+# its serialization ceiling and extra shards buy real throughput.
+N_CLIENTS = 8
+WINDOW = 128
+PER_MSG_OVERHEAD = 20e-6  # sender-side serialization cost per wire message
+FLUSH_INTERVAL = 600e-6
+
+
+def run_one(
+    num_shards: int,
+    *,
+    seed: int = 0,
+    duration: float = 0.1,
+    batch_max: int = BATCH_MAX,
+    n_clients: int = N_CLIENTS,
+    window: int = WINDOW,
+    overhead: float = PER_MSG_OVERHEAD,
+) -> Dict[str, float]:
+    opts = Options(batch_max=batch_max, batch_flush_interval=FLUSH_INTERVAL)
+    spec = ClusterSpec(
+        f=1,
+        n_clients=0,
+        options=opts,
+        num_shards=num_shards,
+        auto_elect_leader=True,
+    )
+    sim = Simulator(seed=seed, net=NetworkConfig(per_msg_overhead=overhead))
+    dep = spec.instantiate(sim)
+    sim.run_for(0.01)
+
+    def route_for(cid):
+        return dep.shard_leader(shard_of_command(cid, num_shards)).addr
+
+    clients = []
+    for i in range(n_clients):
+        c = PipelinedClient(
+            f"c{i}",
+            lambda: dep.leader.addr,
+            window=window,
+            route=route_for if num_shards > 1 else None,
+            batch=opts.batch_policy(),  # batch ClientRequests too
+        )
+        sim.register(c)
+        clients.append(c)
+    for c in clients:
+        c.start()
+    sim.run_for(duration)
+    for c in clients:
+        c.stop()
+    sim.run_for(0.05)
+
+    dep.clients.extend(clients)
+    dep.check_all()  # oracle safety + replica agreement + at-most-once
+
+    completed = sum(c.completed for c in clients)
+    lat = Deployment.summary([l for c in clients for (_, l) in c.latencies])
+    backlog = max(r.elog.backlog() for r in dep.replicas)
+    return {
+        "num_shards": num_shards,
+        "commands_per_sec": completed / duration,
+        "completed": completed,
+        "chosen_slots": len(dep.oracle.chosen),
+        "wire_messages": sim.messages_sent,
+        "median_latency_ms": lat["median"] * 1e3,
+        "iqr_latency_ms": lat["iqr"] * 1e3,
+        "replica_backlog_end": backlog,
+    }
+
+
+def main(fast: bool = True, smoke: bool = False) -> List[Dict[str, float]]:
+    duration = 0.06 if smoke else (common.t(1.0) if not fast else 0.1)
+    shard_counts = (1, 4) if smoke else SHARD_COUNTS
+    curve = []
+    for s in shard_counts:
+        row = run_one(s, duration=duration)
+        curve.append(row)
+        common.record("sharding", **row)
+    base = curve[0]["commands_per_sec"]
+    for row in curve:
+        row["speedup_vs_1shard"] = row["commands_per_sec"] / base if base else 0.0
+    out = os.environ.get("BENCH_SHARDING_JSON", "BENCH_sharding.json")
+    with open(out, "w") as fh:
+        json.dump(
+            {
+                "workload": {
+                    "clients": N_CLIENTS,
+                    "window": WINDOW,
+                    "batch_max": BATCH_MAX,
+                    "per_msg_overhead_s": PER_MSG_OVERHEAD,
+                    "flush_interval_s": FLUSH_INTERVAL,
+                    "duration_s": duration,
+                },
+                "curve": curve,
+            },
+            fh,
+            indent=2,
+        )
+    return curve
+
+
+if __name__ == "__main__":
+    curve = main(smoke="--smoke" in sys.argv)
+    common.emit_csv()
+    four = next((r for r in curve if r["num_shards"] == 4), None)
+    if four is not None:
+        print(f"\n4-shard speedup vs 1 shard: {four['speedup_vs_1shard']:.2f}x")

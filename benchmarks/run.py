@@ -34,6 +34,7 @@ def main() -> None:
         bench_nemesis,
         bench_reconfiguration,
         bench_roofline,
+        bench_sharding,
         bench_thriftiness,
         common,
     )
@@ -47,6 +48,7 @@ def main() -> None:
         ("sec7 fast paxos", bench_fast_paxos.main),
         ("fig14 thriftiness", bench_thriftiness.main),
         ("sec8 hot-path batching", bench_batching.main),
+        ("sharded log plane", bench_sharding.main),
         ("sec8 reconfiguration under fire", bench_nemesis.main),
         ("elastic control plane", bench_elastic.main),
         ("roofline table", bench_roofline.main),

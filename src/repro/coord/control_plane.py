@@ -114,6 +114,11 @@ class PodInfo:
     name: str
     acceptor_addrs: Tuple[str, ...]  # acceptors hosted on this pod
 
+    def shard_slice(self, shard: int, group: int) -> Tuple[str, ...]:
+        """The ``group``-sized slice of this pod's acceptors dedicated to
+        one proposer shard (each shard needs its own acceptor group)."""
+        return self.acceptor_addrs[shard * group : (shard + 1) * group]
+
 
 class ClusterController:
     """Drives the consensus deployment for the elastic trainer.
@@ -131,8 +136,14 @@ class ClusterController:
         seed: int = 0,
         net: Optional[NetworkConfig] = None,
         options: Optional[Options] = None,
+        num_shards: int = 1,
     ):
         self.f = f
+        # Sharded log plane: the ledger's slot space is stride-partitioned
+        # across ``num_shards`` proposer shards; each pod hosts one
+        # 2f+1-acceptor group per shard so membership changes still map
+        # 1:1 onto per-shard consensus reconfigurations.
+        self.num_shards = max(1, num_shards)
         # The ledger cluster is described declaratively and instantiated on
         # the deterministic simulator transport; a real deployment hands
         # the same spec an AsyncTransport (or a future TCP transport).
@@ -143,6 +154,7 @@ class ClusterController:
             sm_factory=LedgerSM,
             acceptor_pool=0,
             auto_elect_leader=False,
+            num_shards=self.num_shards,
         )
         self.sim = Simulator(seed=seed, net=net)
         self.dep: Deployment = self.spec.instantiate(self.sim)
@@ -152,11 +164,12 @@ class ClusterController:
         self._pending: Dict[Tuple[str, int], Any] = {}
         self.epoch = 0
         self.epoch_pods: Tuple[str, ...] = tuple(pods)
-        # Register the initial pods' acceptors and elect the leader on them.
+        # Register the initial pods' acceptors and elect every shard's
+        # leader on its slice of them.
         for p in pods:
             self.add_pod(p)
-        cfg = self._config_for(self.epoch_pods)
-        self.dep.proposers[0].become_leader(cfg)
+        for s, sh in enumerate(self.dep.shards):
+            sh.proposers[0].become_leader(self._config_for(self.epoch_pods, shard=s))
         self.sim.run_for(0.05)
         self.commit(ReconfigCommand(epoch=0, pods=self.epoch_pods))
 
@@ -169,20 +182,51 @@ class ClusterController:
         suspect_after: float = 0.08,
         confirm_misses: int = 2,
     ):
-        """Wire a heartbeat FailureDetector over every pod's acceptors.
+        """Wire a heartbeat FailureDetector over every pod's acceptors
+        AND every proposer shard's leaders.
 
         A *confirmed* suspicion (``confirm_misses`` consecutive silent
         probe rounds — transport-level crash evidence, not a synthetic
-        flag) replaces the dead pod with the next spare and drives a real
-        ``reconfigure``.  Returns the detector; suspicion history is on
-        ``detector.suspected`` / the controller's ``failover_log``.
+        flag) of a pod replaces it with the next spare and drives a real
+        ``reconfigure``.  A confirmed suspicion of a shard's *leader*
+        promotes that shard's follower (full Phase-1 takeover on the
+        shard's own acceptor group) — the other shards are untouched:
+        their leaders, rounds and configurations never change.  Returns
+        the detector; history is on ``detector.suspected`` / the
+        controller's ``failover_log``.
         """
         from repro.coord.failure import FailureDetector
 
         self._spares: List[str] = list(spares)
         self.failover_log: List[Dict[str, Any]] = []
 
-        def on_suspect(pod: str) -> None:
+        def on_suspect_leader(key: str) -> None:
+            _, s_str, addr = key.split(":", 2)
+            s = int(s_str)
+            group = self.dep.shard_proposers(s)
+            victim = next((p for p in group if p.addr == addr), None)
+            if victim is None or not victim.is_leader:
+                return  # a silent follower needs no failover
+            successor = next(
+                (p for p in group if p.addr != addr and not p.failed), None
+            )
+            if successor is None:
+                return
+            successor.become_leader(self._config_for(self.epoch_pods, shard=s))
+            self.failover_log.append(
+                {
+                    "suspected": addr,
+                    "shard": s,
+                    "action": "shard_takeover",
+                    "new_leader": successor.addr,
+                }
+            )
+
+        def on_suspect(key: str) -> None:
+            if key.startswith("proposer:"):
+                on_suspect_leader(key)
+                return
+            pod = key
             if pod not in self.epoch_pods:
                 return
             replacement = self._spares.pop(0) if self._spares else None
@@ -204,9 +248,16 @@ class ClusterController:
                 {"suspected": pod, "replacement": replacement, **telemetry}
             )
 
+        targets: Dict[str, Any] = {
+            p: info.acceptor_addrs for p, info in self.pods.items()
+        }
+        for s, sh in enumerate(self.dep.shards):
+            for p in sh.proposers:
+                targets[f"proposer:{s}:{p.addr}"] = (p.addr,)
+
         self.detector = FailureDetector(
             "detector",
-            {p: info.acceptor_addrs for p, info in self.pods.items()},
+            targets,
             ping_interval=ping_interval,
             suspect_after=suspect_after,
             confirm_misses=confirm_misses,
@@ -221,10 +272,10 @@ class ClusterController:
             return self.pods[name]
         # Pod-hosted acceptors get the same hot-path batch policy as the
         # spec-built roles, so consensus_options batching covers the
-        # acceptor->proposer Phase2B leg too.
+        # acceptor->proposer Phase2B leg too.  One 2f+1 group per shard.
         batch = (self.spec.options or Options()).batch_policy()
         addrs = []
-        for _ in range(2 * self.f + 1):
+        for _ in range(self.num_shards * (2 * self.f + 1)):
             a = Acceptor(f"{name}/acc{next(self._acc_seq)}", batch=batch)
             self.sim.register(a)
             self.dep.acceptors.append(a)
@@ -237,23 +288,28 @@ class ClusterController:
         for a in self.pods[name].acceptor_addrs:
             self.sim.fail(a)
 
-    def _config_for(self, pods: Sequence[str]) -> Configuration:
-        """2f+1 acceptors spread across the pod set (one per pod, wrapping)."""
+    def _config_for(self, pods: Sequence[str], shard: int = 0) -> Configuration:
+        """2f+1 acceptors spread across the pod set (one per pod,
+        wrapping), drawn from each pod's slice for ``shard``."""
+        group = 2 * self.f + 1
         addrs = []
         pod_list = [self.pods[p] for p in pods]
         i = 0
-        while len(addrs) < 2 * self.f + 1:
+        while len(addrs) < group:
             pod = pod_list[i % len(pod_list)]
             idx = i // len(pod_list)
-            addrs.append(pod.acceptor_addrs[idx % len(pod.acceptor_addrs)])
+            pool = pod.shard_slice(shard, group)
+            addrs.append(pool[idx % len(pool)])
             i += 1
         return self.dep.fresh_config(addrs)
 
     # -- ledger operations --------------------------------------------------
     def commit(self, op: Any, timeout: float = 1.0) -> int:
         """Propose ``op`` and run the sim until it is chosen; returns slot."""
-        leader = self.dep.leader
         cmd = m.Command(cmd_id=("ctrl", next(self._cmd_seq)), op=op)
+        from repro.core.client import shard_of_command
+
+        leader = self.dep.shard_leader(shard_of_command(cmd.cmd_id, self.num_shards))
         before = set(leader.chosen_values)
         leader.on_message("ctrl", m.ClientRequest(command=cmd))
         deadline = self.sim.now + timeout
@@ -270,14 +326,32 @@ class ClusterController:
         for p in new_pods:
             self.add_pod(p)
         t0 = self.sim.now
-        leader = self.dep.leader
         n_reconfigs_before = len(self.dep.oracle.reconfig_durations)
-        leader.reconfigure(self._config_for(new_pods))
+        # Every shard swaps onto the new pods' acceptor slices — one
+        # membership change is num_shards independent consensus
+        # reconfigurations against the shared matchmaker set.  A shard
+        # caught without a stable leader (mid-takeover, leader crashed)
+        # must not be silently left on the old membership: promote its
+        # live proposer straight onto the new configuration instead
+        # (takeover = full Phase 1 against the new acceptor set).
+        n_started = 0
+        skipped = []
+        for s in range(self.num_shards):
+            leader = self.dep.shard_leader(s)
+            cfg = self._config_for(new_pods, shard=s)
+            if leader.is_leader and leader.round is not None:
+                leader.reconfigure(cfg)
+                n_started += 1
+            elif not leader.failed:
+                leader.become_leader(cfg)
+                n_started += 1
+            else:
+                skipped.append(s)  # every proposer of the shard is down
         # The new configuration is active right after the Matchmaking
         # phase (Optimization 2 keeps commands flowing meanwhile).
         deadline = self.sim.now + 1.0
         while (
-            len(self.dep.oracle.reconfig_durations) == n_reconfigs_before
+            len(self.dep.oracle.reconfig_durations) < n_reconfigs_before + n_started
             and self.sim.now < deadline
         ):
             self.sim.run_for(0.001)
@@ -289,6 +363,8 @@ class ClusterController:
             "reconfig_started": t0,
             "config_active": t_active,
             "activation_ms": (t_active - t0) * 1e3,
+            "shards_reconfigured": float(n_started),
+            "shards_skipped": float(len(skipped)),
         }
 
     def commit_step(self, step: int, digest: str = "") -> None:

@@ -3,13 +3,22 @@
 # Protocol logic lives in pure-kernel role classes (runtime.ProtocolNode);
 # I/O is an exchangeable Transport (sim.Simulator / net.AsyncTransport).
 from .acceptor import Acceptor
-from .client import Client, PipelinedClient
-from .deploy import ClusterSpec, Deployment, build
+from .client import Client, PipelinedClient, ShardRouter, shard_of_command
+from .deploy import ClusterSpec, Deployment, Shard, build
 from .fast_paxos import FastAcceptor, FastClient, FastCoordinator
 from .horizontal import ConfigChange, HorizontalProposer
+from .log import (
+    AckTracker,
+    CommandLog,
+    ExecutionLog,
+    SlotOwnership,
+    SlotState,
+    shard_of_slot,
+)
 from .matchmaker import Matchmaker
 from .mm_reconfig import MMReconfigCoordinator
 from .nemesis import (
+    ClockSkew,
     Crash,
     FaultPlane,
     Heal,
@@ -42,21 +51,25 @@ from .scenarios import (
     ScenarioResult,
     run_matrix,
     run_scenario,
+    shrink_failing_scenario,
+    shrink_schedule,
 )
 from .sim import NetworkConfig, Node, Simulator
 from .single import SingleDecreeProposer
 
 __all__ = [
-    "Acceptor", "AsyncTransport", "BatchPolicy", "Broadcast", "CancelTimer",
-    "Client", "ClusterSpec", "ConfigChange", "Configuration", "Crash",
-    "Deployment", "FastAcceptor", "FastClient", "FastCoordinator",
-    "FaultPlane", "Heal", "HorizontalProposer", "KVStoreSM",
-    "MMReconfigCoordinator", "Matchmaker", "NEG_INF", "Nemesis",
-    "NetworkConfig", "Node", "NoopSM", "Options", "Oracle", "Partition",
-    "PipelinedClient", "ProtocolNode", "Proposer", "QuorumSpec", "Replica",
-    "Restart", "Round", "SCENARIO_NAMES", "SafetyViolation", "ScenarioFailure",
-    "ScenarioResult", "Schedule", "Send", "SetTimer", "Simulator",
-    "SingleDecreeProposer", "StateMachine", "Storm", "Transport", "build",
-    "check_invariants", "initial_round", "max_round", "on", "run_matrix",
-    "run_scenario",
+    "AckTracker", "Acceptor", "AsyncTransport", "BatchPolicy", "Broadcast",
+    "CancelTimer", "Client", "ClockSkew", "ClusterSpec", "CommandLog",
+    "ConfigChange", "Configuration", "Crash", "Deployment", "ExecutionLog",
+    "FastAcceptor", "FastClient", "FastCoordinator", "FaultPlane", "Heal",
+    "HorizontalProposer", "KVStoreSM", "MMReconfigCoordinator", "Matchmaker",
+    "NEG_INF", "Nemesis", "NetworkConfig", "Node", "NoopSM", "Options",
+    "Oracle", "Partition", "PipelinedClient", "ProtocolNode", "Proposer",
+    "QuorumSpec", "Replica", "Restart", "Round", "SCENARIO_NAMES",
+    "SafetyViolation", "ScenarioFailure", "ScenarioResult", "Schedule",
+    "Send", "SetTimer", "Shard", "ShardRouter", "Simulator",
+    "SingleDecreeProposer", "SlotOwnership", "SlotState", "StateMachine",
+    "Storm", "Transport", "build", "check_invariants", "initial_round",
+    "max_round", "on", "run_matrix", "run_scenario", "shard_of_command",
+    "shard_of_slot", "shrink_failing_scenario", "shrink_schedule",
 ]

@@ -1,18 +1,82 @@
-"""Closed-loop workload clients (Section 8 methodology).
+"""Closed-loop workload clients (Section 8 methodology) + shard routing.
 
 Every client repeatedly proposes a state machine command, waits for the
 response, and immediately proposes another.  Latency samples are recorded
 with their (virtual) timestamps so benchmarks can compute the paper's
 sliding-window medians / IQRs / standard deviations.
+
+Sharded log plane routing: a command belongs to exactly one proposer
+shard (``shard_of_command``, a deterministic PYTHONHASHSEED-independent
+hash of its cmd_id).  Clients can route *client-side* (``route=`` hands
+every command straight to its shard leader, zero extra hops) or through
+the :class:`ShardRouter` role (one forwarding node, the deployment shape
+for clients that must not know the shard map).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import messages as m
 from .runtime import on
 from .sim import Address, Node
+
+
+def shard_of_command(cmd_id: Tuple[str, int], num_shards: int) -> int:
+    """Deterministic shard assignment for a command.
+
+    Stable across processes (no builtin ``hash``) and balanced per client:
+    consecutive sequence numbers from one client round-robin the shards,
+    which keeps the interleaved slot streams dense — the replica executes
+    in global slot order, so balance is what keeps the pipeline full.
+    """
+    if num_shards <= 1:
+        return 0
+    client, seq = cmd_id
+    return (zlib.crc32(str(client).encode()) + seq) % num_shards
+
+
+class ShardRouter(Node):
+    """Transport-level command router for the sharded log plane.
+
+    Forwards each ClientRequest to the leader of the shard its command
+    hashes to.  Replies flow directly from replicas to the client (the
+    router is on the request path only), and retries re-route — a request
+    hitting a dead shard leader is re-forwarded to the shard's new leader
+    on the client's next retransmission.
+    """
+
+    def __init__(
+        self,
+        addr: Address,
+        leader_providers: Sequence[Callable[[], Optional[Address]]],
+    ):
+        super().__init__(addr)
+        self.leader_providers = list(leader_providers)
+        # telemetry
+        self.routed = 0
+        self.routed_by_shard: Dict[int, int] = {}
+        self.unroutable = 0
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.leader_providers)
+
+    @on(m.ClientRequest)
+    def _on_request(self, src: Address, msg: m.ClientRequest) -> None:
+        shard = shard_of_command(msg.command.cmd_id, self.num_shards)
+        leader = self.leader_providers[shard]()
+        if leader is None:
+            self.unroutable += 1  # client retry re-enters here
+            return
+        self.routed += 1
+        self.routed_by_shard[shard] = self.routed_by_shard.get(shard, 0) + 1
+        self.send(leader, msg)
+
+    @on(m.LeaderHint)
+    def _on_leader_hint(self, src: Address, msg: m.LeaderHint) -> None:
+        pass  # providers already track leadership; clients drive retries
 
 
 class Client(Node):
@@ -25,9 +89,12 @@ class Client(Node):
         retry_timeout: float = 0.5,
         think_time: float = 0.0,
         max_commands: Optional[int] = None,
+        route: Optional[Callable[[Tuple[str, int]], Optional[Address]]] = None,
+        batch=None,
     ):
-        super().__init__(addr)
+        super().__init__(addr, batch=batch)
         self.leader_provider = leader_provider  # () -> leader address
+        self.route = route  # client-side shard routing: cmd_id -> address
         self.op_factory = op_factory
         self.retry_timeout = retry_timeout
         self.think_time = think_time
@@ -73,10 +140,15 @@ class Client(Node):
         self.sent_at = self.now
         self._send_current()
 
+    def _target(self, cmd_id: Tuple[str, int]) -> Optional[Address]:
+        if self.route is not None:
+            return self.route(cmd_id)
+        return self.leader_provider()
+
     def _send_current(self) -> None:
         if self.inflight is None:
             return
-        leader = self.leader_provider()
+        leader = self._target(self.inflight.cmd_id)
         if leader is not None:
             self.send(leader, m.ClientRequest(command=self.inflight))
         if self._retry_timer is not None:
@@ -118,9 +190,12 @@ class PipelinedClient(Node):
         window: int = 16,
         op_factory=lambda n: b"\x00",
         retry_timeout: float = 0.5,
+        route: Optional[Callable[[Tuple[str, int]], Optional[Address]]] = None,
+        batch=None,
     ):
-        super().__init__(addr)
+        super().__init__(addr, batch=batch)
         self.leader_provider = leader_provider
+        self.route = route
         self.window = window
         self.op_factory = op_factory
         self.retry_timeout = retry_timeout
@@ -148,12 +223,17 @@ class PipelinedClient(Node):
             self._fill_window()
             self._arm_retry()
 
+    def _target(self, cmd_id: Tuple[str, int]) -> Optional[Address]:
+        if self.route is not None:
+            return self.route(cmd_id)
+        return self.leader_provider()
+
     def _fill_window(self) -> None:
-        leader = self.leader_provider()
         while self.running and len(self.inflight) < self.window:
             self.seq += 1
             cmd = m.Command(cmd_id=(self.addr, self.seq), op=self.op_factory(self.seq))
             self.inflight[cmd.cmd_id] = (cmd, self.now)
+            leader = self._target(cmd.cmd_id)
             if leader is not None:
                 self.send(leader, m.ClientRequest(command=cmd))
 
@@ -161,11 +241,11 @@ class PipelinedClient(Node):
         def fire() -> None:
             if not self.running:
                 return
-            leader = self.leader_provider()
             cutoff = self.now - self.retry_timeout
-            if leader is not None:
-                for cmd, sent_at in list(self.inflight.values()):
-                    if sent_at <= cutoff:
+            for cmd, sent_at in list(self.inflight.values()):
+                if sent_at <= cutoff:
+                    leader = self._target(cmd.cmd_id)
+                    if leader is not None:
                         self.send(leader, m.ClientRequest(command=cmd))
             self._retry_timer = self.set_timer(self.retry_timeout, fire)
 

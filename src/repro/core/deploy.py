@@ -22,7 +22,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import messages as m
 from .acceptor import Acceptor
-from .client import Client
+from .client import Client, ShardRouter, shard_of_command
 from .matchmaker import Matchmaker
 from .mm_reconfig import MMReconfigCoordinator
 from .oracle import Oracle
@@ -31,6 +31,20 @@ from .quorums import Configuration
 from .replica import NoopSM, Replica, StateMachine
 from .runtime import Transport
 from .sim import NetworkConfig, Simulator
+
+
+@dataclass
+class Shard:
+    """One shard of the sharded log plane: an unchanged Matchmaker Paxos
+    instance (its own proposers + acceptor pool) behind the slot-ownership
+    boundary (``core/log.py``).  Shard 0 of a 1-shard cluster is exactly
+    the historical single-leader deployment.  Leader resolution lives in
+    ``Deployment.shard_leader`` (and the routing closure in
+    ``ClusterSpec.instantiate``), not here."""
+
+    sid: int
+    proposers: List[Proposer]
+    acceptors: List[Acceptor]
 
 
 @dataclass
@@ -53,6 +67,12 @@ class Deployment:
     # invariant checker replays the chosen log through a fresh instance to
     # verify client-observed results are linearizable.
     sm_factory: Callable[[], StateMachine] = NoopSM
+    # Sharded log plane: the per-shard view of proposers/acceptors plus
+    # the optional router node.  ``proposers``/``acceptors`` above remain
+    # the flat (all-shard) lists the invariant checker iterates.
+    shards: List[Shard] = field(default_factory=list)
+    router: Optional[ShardRouter] = None
+    num_shards: int = 1
 
     # ------------------------------------------------------------------
     @property
@@ -62,14 +82,24 @@ class Deployment:
     @property
     def leader(self) -> Proposer:
         # A crashed node may still carry a stale is_leader flag; clients
-        # and scenario scripts must never be routed to a corpse.
-        for p in self.proposers:
+        # and scenario scripts must never be routed to a corpse.  With a
+        # sharded log plane this is shard 0's leader.
+        return self.shard_leader(0)
+
+    def shard_proposers(self, shard: int = 0) -> List[Proposer]:
+        if self.shards:
+            return self.shards[shard].proposers
+        return self.proposers
+
+    def shard_leader(self, shard: int = 0) -> Proposer:
+        group = self.shard_proposers(shard)
+        for p in group:
             if p.is_leader and not p.failed:
                 return p
-        for p in self.proposers:
+        for p in group:
             if not p.failed:
                 return p
-        return self.proposers[0]
+        return group[0]
 
     def attach_nemesis(self, schedule, **kw):
         """Bind a nemesis schedule to this deployment (armed immediately)."""
@@ -81,17 +111,18 @@ class Deployment:
         self.config_seq += 1
         return Configuration.majority(self.config_seq, acceptor_addrs)
 
-    def random_config(self) -> Configuration:
-        """A random 2f+1-subset of the acceptor pool (Section 8.1)."""
+    def random_config(self, shard: int = 0) -> Configuration:
+        """A random 2f+1-subset of the (shard's) acceptor pool (Sec 8.1)."""
         n = 2 * self.f + 1
-        addrs = self.sim.rng.sample([a.addr for a in self.acceptors], n)
+        pool = self.shards[shard].acceptors if self.shards else self.acceptors
+        addrs = self.sim.rng.sample([a.addr for a in pool], n)
         return self.fresh_config(sorted(addrs))
 
-    def reconfigure_random(self) -> None:
-        leader = self.leader
+    def reconfigure_random(self, shard: int = 0) -> None:
+        leader = self.shard_leader(shard)
         if not leader.is_leader or leader.round is None:
             return  # no stable leader yet (e.g. initial WAN Phase 1 pending)
-        leader.reconfigure(self.random_config())
+        leader.reconfigure(self.random_config(shard))
 
     def reconfigure_matchmakers(self, new_addrs: Sequence[str]) -> None:
         if self.mm_coordinator.phase != "idle":
@@ -178,6 +209,14 @@ class ClusterSpec:
     client_max_commands: Optional[int] = None
     client_retry_timeout: float = 0.5
     auto_elect_leader: bool = True
+    # Sharded log plane: the log's slot space is stride-partitioned across
+    # ``num_shards`` independent Matchmaker Paxos instances (each with its
+    # own f+1 proposers and acceptor pool) that share the matchmaker set
+    # and the replicas.  num_shards=1 is the historical deployment,
+    # byte-for-byte.  ``route_via_router`` sends client traffic through
+    # the ShardRouter node instead of routing client-side.
+    num_shards: int = 1
+    route_via_router: bool = False
 
     # -- address plan ----------------------------------------------------
     def matchmaker_addrs(self) -> Tuple[str, ...]:
@@ -196,40 +235,90 @@ class ClusterSpec:
     def proposer_addrs(self) -> Tuple[str, ...]:
         return tuple(f"p{i}" for i in range(self.f + 1))
 
+    # Shard s > 0 gets its own namespaced proposer/acceptor addresses;
+    # shard 0 keeps the historical names.
+    def shard_proposer_addrs(self, shard: int) -> Tuple[str, ...]:
+        if shard == 0:
+            return self.proposer_addrs()
+        return tuple(f"s{shard}p{i}" for i in range(self.f + 1))
+
+    def shard_acceptor_addrs(self, shard: int) -> Tuple[str, ...]:
+        if shard == 0:
+            return self.acceptor_addrs()
+        # Same pool size as shard 0, whatever acceptor_addrs() decides.
+        return tuple(f"s{shard}a{i}" for i in range(len(self.acceptor_addrs())))
+
+    def all_proposer_addrs(self) -> Tuple[str, ...]:
+        return tuple(
+            a
+            for s in range(max(1, self.num_shards))
+            for a in self.shard_proposer_addrs(s)
+        )
+
+    def all_acceptor_addrs(self) -> Tuple[str, ...]:
+        return tuple(
+            a
+            for s in range(max(1, self.num_shards))
+            for a in self.shard_acceptor_addrs(s)
+        )
+
+    def router_addr(self) -> str:
+        return "router"
+
     # -- construction ----------------------------------------------------
     def instantiate(self, transport: Transport) -> Deployment:
         """Construct and register every role node on ``transport``."""
         f = self.f
+        S = max(1, self.num_shards)
         oracle = Oracle()
         opts = self.options or Options()
         batch = opts.batch_policy()
 
         mm_addrs = self.matchmaker_addrs()
         standby_addrs = self.standby_matchmaker_addrs()
-        acc_addrs = self.acceptor_addrs()
         rep_addrs = self.replica_addrs()
-        prop_addrs = self.proposer_addrs()
+        shard_acc_addrs = [self.shard_acceptor_addrs(s) for s in range(S)]
+        shard_prop_addrs = [self.shard_proposer_addrs(s) for s in range(S)]
+        all_prop_addrs = tuple(a for sp in shard_prop_addrs for a in sp)
 
         matchmakers = [Matchmaker(a) for a in mm_addrs]
         standby = [Matchmaker(a, enabled=False) for a in standby_addrs]
-        acceptors = [Acceptor(a, batch=batch) for a in acc_addrs]
+        acceptors_by_shard = [
+            [Acceptor(a, batch=batch) for a in addrs] for addrs in shard_acc_addrs
+        ]
+        acceptors = [a for group in acceptors_by_shard for a in group]
         replicas = [
-            Replica(a, self.sm_factory, leader_addrs=prop_addrs, batch=batch)
+            Replica(
+                a,
+                self.sm_factory,
+                leader_addrs=all_prop_addrs,
+                batch=batch,
+                num_shards=S,
+                # Sharded: coalesce watermark acks (they fan out to every
+                # shard's proposers); unsharded keeps ack-per-progression.
+                ack_stride=16 if S > 1 else 1,
+            )
             for a in rep_addrs
         ]
-        proposers = [
-            Proposer(
-                prop_addrs[i],
-                i,
-                matchmakers=mm_addrs,
-                replicas=rep_addrs,
-                proposers=prop_addrs,
-                oracle=oracle,
-                options=opts,
-                f=f,
-            )
-            for i in range(f + 1)
+        proposers_by_shard = [
+            [
+                Proposer(
+                    shard_prop_addrs[s][i],
+                    i,
+                    matchmakers=mm_addrs,
+                    replicas=rep_addrs,
+                    proposers=shard_prop_addrs[s],
+                    oracle=oracle,
+                    options=opts,
+                    f=f,
+                    shard=s,
+                    num_shards=S,
+                )
+                for i in range(f + 1)
+            ]
+            for s in range(S)
         ]
+        proposers = [p for group in proposers_by_shard for p in group]
 
         def on_mm_complete(new_set: Tuple[str, ...]) -> None:
             for p in proposers:
@@ -239,30 +328,54 @@ class ClusterSpec:
             "mmcoord", 99, f=f, on_complete=on_mm_complete
         )
 
-        def current_leader() -> Optional[str]:
-            for p in proposers:
+        def shard_leader_addr(s: int) -> Optional[str]:
+            group = proposers_by_shard[s]
+            for p in group:
                 if p.is_leader and not p.failed:
                     return p.addr
             # Fall back to whoever the live proposers believe leads.
-            for p in proposers:
+            for p in group:
                 if p.leader_addr and not p.failed:
                     return p.leader_addr
-            return prop_addrs[0]
+            return shard_prop_addrs[s][0]
+
+        def current_leader() -> Optional[str]:
+            return shard_leader_addr(0)
+
+        router: Optional[ShardRouter] = None
+        if S > 1:
+            router = ShardRouter(
+                self.router_addr(),
+                [lambda s=s: shard_leader_addr(s) for s in range(S)],
+            )
+
+        if S > 1 and self.route_via_router:
+            leader_provider = lambda: self.router_addr()  # noqa: E731
+            route = None
+        elif S > 1:
+            leader_provider = current_leader
+            route = lambda cid: shard_leader_addr(shard_of_command(cid, S))  # noqa: E731
+        else:
+            leader_provider = current_leader
+            route = None
 
         clients = [
             Client(
                 f"c{i}",
-                current_leader,
+                leader_provider,
                 think_time=self.client_think_time,
                 max_commands=self.client_max_commands,
                 retry_timeout=self.client_retry_timeout,
+                route=route,
             )
             for i in range(self.n_clients)
         ]
 
-        for node in [
-            *matchmakers, *standby, *acceptors, *replicas, *proposers, mm_coord, *clients
-        ]:
+        nodes = [*matchmakers, *standby, *acceptors, *replicas, *proposers, mm_coord]
+        if router is not None:
+            nodes.append(router)
+        nodes.extend(clients)
+        for node in nodes:
             transport.register(node)
 
         dep = Deployment(
@@ -277,13 +390,21 @@ class ClusterSpec:
             clients=clients,
             mm_coordinator=mm_coord,
             sm_factory=self.sm_factory,
+            shards=[
+                Shard(s, proposers_by_shard[s], acceptors_by_shard[s])
+                for s in range(S)
+            ],
+            router=router,
+            num_shards=S,
         )
         if self.auto_elect_leader:
             # Election only emits effects, so it is transport-agnostic;
             # on AsyncTransport the effects replay when run() starts.
-            dep.proposers[0].become_leader(
-                dep.fresh_config([a.addr for a in dep.acceptors[: 2 * f + 1]])
-            )
+            # Every shard elects its proposer 0 on its own acceptor pool.
+            for sh in dep.shards:
+                sh.proposers[0].become_leader(
+                    dep.fresh_config([a.addr for a in sh.acceptors[: 2 * f + 1]])
+                )
         return dep
 
 

@@ -22,6 +22,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from . import messages as m
+from .log import CommandLog, SlotState
 from .oracle import Oracle
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
@@ -39,13 +40,9 @@ class ConfigChange:
         return f"ConfigChange({self.config!r})"
 
 
-@dataclass
-class HSlotState:
-    value: Any
-    round: Round
-    config: Configuration
-    acks: Set[Address] = field(default_factory=set)
-    chosen: bool = False
+# The horizontal baseline shares the proposer-side slot bookkeeping
+# (core/log.py); ``HSlotState`` remains as the historical alias.
+HSlotState = SlotState
 
 
 class HorizontalProposer(Node):
@@ -79,14 +76,28 @@ class HorizontalProposer(Node):
         # Slot s uses the config with the largest effective slot <= s.
         self.configs: Dict[int, Configuration] = {0: initial_config}
 
-        self.slots: Dict[int, HSlotState] = {}
-        self.next_slot = 0
-        self.chosen_values: Dict[int, Any] = {}
-        self.chosen_watermark = 0
+        self.cmdlog = CommandLog()  # owns the whole log (single leader)
         self.queued: List[m.Command] = []
         # telemetry
         self.stall_count = 0
         self.reconfig_slots: List[int] = []
+
+    # -- log views (historical field names) ----------------------------
+    @property
+    def slots(self) -> Dict[int, SlotState]:
+        return self.cmdlog.slots
+
+    @property
+    def next_slot(self) -> int:
+        return self.cmdlog.next_slot
+
+    @property
+    def chosen_values(self) -> Dict[int, Any]:
+        return self.cmdlog.chosen_values
+
+    @property
+    def chosen_watermark(self) -> int:
+        return self.cmdlog.chosen_watermark
 
     # ------------------------------------------------------------------
     def config_for_slot(self, slot: int) -> Configuration:
@@ -159,15 +170,13 @@ class HorizontalProposer(Node):
         self._propose_at(slot, cmd)
 
     def _claim_slot(self) -> Optional[int]:
-        if self.next_slot - self.chosen_watermark >= self.alpha:
+        if self.cmdlog.in_flight() >= self.alpha:
             return None
-        slot = self.next_slot
-        self.next_slot += 1
-        return slot
+        return self.cmdlog.claim()
 
     def _propose_at(self, slot: int, value: Any) -> None:
         cfg = self.config_for_slot(slot)
-        st = HSlotState(value=value, round=self.round, config=cfg)
+        st = SlotState(value=value, round=self.round, config=cfg)
         self.slots[slot] = st
         self._send_phase2a(slot, thrifty=self.thrifty)
 
@@ -199,15 +208,14 @@ class HorizontalProposer(Node):
             return
         if st is not None:
             st.chosen = True
-        self.chosen_values[slot] = value
+        self.cmdlog.note_seen(slot)
+        self.cmdlog.mark_chosen(slot, value)
         if isinstance(value, ConfigChange):
             # Figure 8: effective from slot + alpha.
             self.configs[slot + self.alpha] = value.config
         if not external:
             self.oracle.on_chosen(slot, value, self.round, self.now, self.addr)
             self.broadcast(self.replicas, m.Chosen(slot=slot, value=value))
-        while self.chosen_watermark in self.chosen_values:
-            self.chosen_watermark += 1
         self._flush_queued()
 
     def _flush_queued(self) -> None:

@@ -28,8 +28,12 @@ from .sim import Address, Node
 class Matchmaker(Node):
     def __init__(self, addr: Address, *, enabled: bool = True):
         super().__init__(addr)
-        self.log: Dict[Round, Configuration] = {}
-        self.gc_watermark: Any = NEG_INF  # rounds < w are garbage collected
+        # Sharded log plane: each shard runs its own Matchmaking phase
+        # against this shared matchmaker set, so (L, w) is kept per
+        # shard, uniformly, shard 0 included.  The historical ``log`` /
+        # ``gc_watermark`` names remain as shard-0 views below.
+        self.shard_logs: Dict[int, Dict[Round, Configuration]] = {0: {}}
+        self.shard_gc: Dict[int, Any] = {0: NEG_INF}
         self.stopped = False
         # A bootstrapped matchmaker may not process until its set is chosen.
         self.enabled = enabled
@@ -42,15 +46,56 @@ class Matchmaker(Node):
         self.match_count = 0
         self.history_sizes = []
 
+    # -- shard-0 views (historical field names; tests mutate these) --------
+    @property
+    def log(self) -> Dict[Round, Configuration]:
+        return self.shard_logs.setdefault(0, {})
+
+    @log.setter
+    def log(self, value: Dict[Round, Configuration]) -> None:
+        self.shard_logs[0] = value
+
+    @property
+    def gc_watermark(self) -> Any:
+        return self.shard_gc.get(0, NEG_INF)
+
+    @gc_watermark.setter
+    def gc_watermark(self, w: Any) -> None:
+        self.shard_gc[0] = w
+
     # -- helpers -----------------------------------------------------------
-    def _history_before(self, rnd: Round) -> Tuple[Tuple[Round, Configuration], ...]:
-        items = [(j, c) for j, c in self.log.items() if j < rnd]
+    def _log_for(self, shard: int) -> Dict[Round, Configuration]:
+        return self.shard_logs.setdefault(shard, {})
+
+    def _gc_for(self, shard: int) -> Any:
+        return self.shard_gc.get(shard, NEG_INF)
+
+    def _set_gc(self, shard: int, w: Any) -> None:
+        self.shard_gc[shard] = w
+
+    def _history_before(
+        self, rnd: Round, shard: int = 0
+    ) -> Tuple[Tuple[Round, Configuration], ...]:
+        items = [(j, c) for j, c in self._log_for(shard).items() if j < rnd]
         items.sort(key=lambda jc: jc[0].key())
         return tuple(items)
 
     def snapshot(self) -> Tuple[Tuple[Round, Configuration], ...]:
         items = sorted(self.log.items(), key=lambda jc: jc[0].key())
         return tuple(items)
+
+    def shard_snapshots(self) -> Tuple[m.ShardLogSnapshot, ...]:
+        """Every shard > 0 as (shard, entries, gc_watermark) triples
+        (shard 0 travels in StopB/Bootstrap's historical fields)."""
+        out = []
+        for s in sorted(set(self.shard_logs) | set(self.shard_gc)):
+            if s == 0:
+                continue
+            entries = tuple(
+                sorted(self.shard_logs.get(s, {}).items(), key=lambda jc: jc[0].key())
+            )
+            out.append((s, entries, self.shard_gc.get(s, NEG_INF)))
+        return tuple(out)
 
     def _live(self) -> bool:
         """MatchA/GarbageA are only served by a live (un-stopped, enabled)
@@ -63,7 +108,14 @@ class Matchmaker(Node):
         # Section 6: freeze.  StopA is answered even when already stopped
         # (idempotent) so that f+1 StopB responses can always be gathered.
         self.stopped = True
-        self.send(src, m.StopB(log=self.snapshot(), gc_watermark=self.gc_watermark))
+        self.send(
+            src,
+            m.StopB(
+                log=self.snapshot(),
+                gc_watermark=self.gc_watermark,
+                shard_logs=self.shard_snapshots(),
+            ),
+        )
 
     @on(m.MMEnable)
     def _on_mm_enable(self, src: Address, msg: m.MMEnable) -> None:
@@ -77,39 +129,41 @@ class Matchmaker(Node):
     def _on_match_a(self, src: Address, msg: m.MatchA) -> None:
         if not self._live():
             return
-        i, ci = msg.round, msg.config
-        if i < self.gc_watermark:
-            self.send(src, m.MatchNack(round=i, witnessed=self.gc_watermark))
+        i, ci, shard = msg.round, msg.config, msg.shard
+        log, gc_w = self._log_for(shard), self._gc_for(shard)
+        if i < gc_w:
+            self.send(src, m.MatchNack(round=i, witnessed=gc_w))
             return
         # Idempotent retransmission: same round, same configuration.
-        if i in self.log and self.log[i].config_id == ci.config_id:
+        if i in log and log[i].config_id == ci.config_id:
             self.send(
                 src,
                 m.MatchB(
                     round=i,
-                    gc_watermark=self.gc_watermark,
-                    history=self._history_before(i),
+                    gc_watermark=gc_w,
+                    history=self._history_before(i, shard),
                 ),
             )
             return
-        witnessed = [j for j in self.log if j >= i]
+        witnessed = [j for j in log if j >= i]
         if witnessed:
             self.send(src, m.MatchNack(round=i, witnessed=max(witnessed, key=lambda r: r.key())))
             return
-        hist = self._history_before(i)
-        self.log[i] = ci
+        hist = self._history_before(i, shard)
+        log[i] = ci
         self.match_count += 1
         self.history_sizes.append(len(hist))
-        self.send(src, m.MatchB(round=i, gc_watermark=self.gc_watermark, history=hist))
+        self.send(src, m.MatchB(round=i, gc_watermark=gc_w, history=hist))
 
     @on(m.GarbageA)
     def _on_garbage_a(self, src: Address, msg: m.GarbageA) -> None:
         if not self._live():
             return
-        i = msg.round
-        for j in [j for j in self.log if j < i]:
-            del self.log[j]
-        self.gc_watermark = max_round(self.gc_watermark, i)
+        i, shard = msg.round, msg.shard
+        log = self._log_for(shard)
+        for j in [j for j in log if j < i]:
+            del log[j]
+        self._set_gc(shard, max_round(self._gc_for(shard), i))
         self.send(src, m.GarbageB(round=i))
 
     # -- Section 6: bootstrap ------------------------------------------------
@@ -118,8 +172,11 @@ class Matchmaker(Node):
         if not self.bootstrapped or self.stopped:
             # Fresh node, or a previously-stopped matchmaker being recycled
             # into a new cohort: adopt the merged state wholesale.
-            self.log = {j: c for j, c in msg.log}
-            self.gc_watermark = msg.gc_watermark
+            self.shard_logs = {0: {j: c for j, c in msg.log}}
+            self.shard_gc = {0: msg.gc_watermark}
+            for s, log, w in msg.shard_logs:
+                self.shard_logs[s] = {j: c for j, c in log}
+                self.shard_gc[s] = w
             self.bootstrapped = True
             self.stopped = False
             self.enabled = False  # awaits MMEnable (set is chosen first)

@@ -89,6 +89,11 @@ class LeaderHint:
 class MatchA:
     round: Round
     config: Configuration
+    # Sharded log plane: matchmakers keep an independent (L, w) per shard
+    # so every shard can run its Matchmaking phase against the *shared*
+    # matchmaker set without round interference.  shard=0 is the
+    # historical unsharded namespace.
+    shard: int = 0
 
 
 @dataclass(frozen=True)
@@ -187,6 +192,16 @@ class StoredWatermarkAck:
 
 
 @dataclass(frozen=True)
+class FillRequest:
+    """Replica -> shard leaders: execution is blocked on a hole at
+    ``slot`` (sharded log plane, Mencius-style skip).  The leader owning
+    the slot noop-fills its stream up through it; everyone else ignores
+    the request."""
+
+    slot: Slot
+
+
+@dataclass(frozen=True)
 class RecoverA:
     """New leader asks replicas for their chosen prefix."""
 
@@ -203,6 +218,7 @@ class RecoverB:
 @dataclass(frozen=True)
 class GarbageA:
     round: Round  # garbage collect all configurations in rounds < round
+    shard: int = 0  # scoped to one shard's configuration log
 
 
 @dataclass(frozen=True)
@@ -218,16 +234,24 @@ class StopA:
     pass
 
 
+# ``log`` / ``gc_watermark`` carry shard 0 (the historical fields);
+# ``shard_logs`` carries every shard > 0 as (shard, entries, watermark)
+# triples so a Section 6 handover moves the whole sharded state.
+ShardLogSnapshot = Tuple[int, Tuple[Tuple[Round, Configuration], ...], Any]
+
+
 @dataclass(frozen=True)
 class StopB:
     log: Tuple[Tuple[Round, Configuration], ...]
     gc_watermark: Any
+    shard_logs: Tuple[ShardLogSnapshot, ...] = ()
 
 
 @dataclass(frozen=True)
 class Bootstrap:
     log: Tuple[Tuple[Round, Configuration], ...]
     gc_watermark: Any
+    shard_logs: Tuple[ShardLogSnapshot, ...] = ()
 
 
 @dataclass(frozen=True)

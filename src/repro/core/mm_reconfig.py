@@ -70,6 +70,7 @@ class MMReconfigCoordinator(Node):
         self._boot_acks: Set[Address] = set()
         self._merged_log: Tuple[Tuple[Round, Configuration], ...] = ()
         self._merged_w: Any = NEG_INF
+        self._merged_shard_logs: Tuple[m.ShardLogSnapshot, ...] = ()
         self.stats = MMReconfigStats()
 
     # ------------------------------------------------------------------
@@ -105,21 +106,33 @@ class MMReconfigCoordinator(Node):
         if len(self._stop_acks) < self.f + 1:
             return
         self.stats.stopped_at = self.now
-        # Figure 7: merge logs, take the max watermark, drop entries < w.
-        merged: Dict[Round, Configuration] = {}
-        w: Any = NEG_INF
+        # Figure 7, applied uniformly per shard (shard 0 travels in
+        # StopB's historical log/gc_watermark fields): union the logs,
+        # take the max watermark, drop entries below it.
+        per_shard: Dict[int, Dict[Round, Configuration]] = {}
+        per_w: Dict[int, Any] = {}
         for b in self._stop_acks.values():
-            w = max_round(w, b.gc_watermark)
-            for j, c in b.log:
-                merged[j] = c
-        entries = tuple(
-            sorted(
-                ((j, c) for j, c in merged.items() if not (j < w)),
-                key=lambda jc: jc[0].key(),
+            for s, log, sw in ((0, b.log, b.gc_watermark),) + tuple(b.shard_logs):
+                per_w[s] = max_round(per_w.get(s, NEG_INF), sw)
+                for j, c in log:
+                    per_shard.setdefault(s, {})[j] = c
+
+        def pruned(s: int) -> Tuple[Tuple[Round, Configuration], ...]:
+            w = per_w.get(s, NEG_INF)
+            return tuple(
+                sorted(
+                    ((j, c) for j, c in per_shard.get(s, {}).items() if not (j < w)),
+                    key=lambda jc: jc[0].key(),
+                )
             )
+
+        self._merged_log = pruned(0)
+        self._merged_w = per_w.get(0, NEG_INF)
+        self._merged_shard_logs = tuple(
+            (s, pruned(s), per_w[s])
+            for s in sorted(set(per_shard) | set(per_w))
+            if s != 0
         )
-        self._merged_log = entries
-        self._merged_w = w
         # -- step 3: choose M_new among the old matchmakers --------------
         self.phase = "choosing"
         base = self.max_witnessed
@@ -174,7 +187,11 @@ class MMReconfigCoordinator(Node):
         # -- step 4: bootstrap the new matchmakers ------------------------
         self.phase = "bootstrapping"
         self._boot_acks = set()
-        boot = m.Bootstrap(log=self._merged_log, gc_watermark=self._merged_w)
+        boot = m.Bootstrap(
+            log=self._merged_log,
+            gc_watermark=self._merged_w,
+            shard_logs=self._merged_shard_logs,
+        )
         self.broadcast(self.m_new, boot)
         self._arm_retry("bootstrapping", lambda: self.broadcast(self.m_new, boot))
 

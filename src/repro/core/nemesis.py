@@ -99,13 +99,31 @@ class Storm:
 
 
 @dataclass(frozen=True)
+class ClockSkew:
+    """Skew ``addr``'s local clock: every timer delay the node arms is
+    scaled by ``scale`` and shifted by ``offset`` seconds (floored at 0).
+    ``scale > 1`` models a slow clock (timers fire late: heartbeats,
+    retransmissions and election checks all drift), ``scale < 1`` a fast
+    one.  The protocol must stay safe under arbitrary skew — the paper's
+    asynchronous model has no clock synchronization at all (Section 2.1).
+    Removed by ``Heal`` or by installing ``ClockSkew(addr, 1.0, 0.0)``."""
+
+    addr: Address
+    scale: float = 1.0
+    offset: float = 0.0
+
+
+@dataclass(frozen=True)
 class Heal:
-    """Remove every partition and storm currently installed."""
+    """Remove every partition, storm and clock skew currently installed."""
 
 
 @dataclass(frozen=True)
 class ReconfigureRandom:
-    """Leader swaps to a random 2f+1 acceptor subset (Section 8.1)."""
+    """Leader swaps to a random 2f+1 acceptor subset (Section 8.1).
+    ``shard`` scopes the swap to one proposer shard's acceptor group."""
+
+    shard: int = 0
 
 
 @dataclass(frozen=True)
@@ -117,10 +135,11 @@ class MMReconfigure:
 
 @dataclass(frozen=True)
 class Takeover:
-    """Proposer ``index`` runs leader takeover with a fresh random
-    configuration (full Phase 1, no bypass)."""
+    """Proposer ``index`` (of shard ``shard``) runs leader takeover with a
+    fresh random configuration (full Phase 1, no bypass)."""
 
     index: int
+    shard: int = 0
 
 
 @dataclass(frozen=True)
@@ -175,10 +194,12 @@ class FaultPlane:
     def __init__(self) -> None:
         self._partitions: List[Tuple[FrozenSet[Address], FrozenSet[Address], bool]] = []
         self._storms: List[Storm] = []
+        self._skews: Dict[Address, Tuple[float, float]] = {}  # addr -> (scale, offset)
         # telemetry
         self.dropped_by_partition = 0
         self.dropped_by_storm = 0
         self.duplicated = 0
+        self.skewed_timers = 0
 
     # -- installation ------------------------------------------------------
     def partition(
@@ -196,13 +217,21 @@ class FaultPlane:
     def end_storm(self, tag: str) -> None:
         self._storms = [s for s in self._storms if s.tag != tag]
 
+    def set_skew(self, addr: Address, scale: float = 1.0, offset: float = 0.0) -> None:
+        """Install (or clear, with scale=1/offset=0) a clock skew."""
+        if scale == 1.0 and offset == 0.0:
+            self._skews.pop(addr, None)
+        else:
+            self._skews[addr] = (scale, offset)
+
     def heal(self) -> None:
         self._partitions.clear()
         self._storms.clear()
+        self._skews.clear()
 
     @property
     def active(self) -> bool:
-        return bool(self._partitions or self._storms)
+        return bool(self._partitions or self._storms or self._skews)
 
     # -- the interposition -------------------------------------------------
     def on_send(
@@ -232,6 +261,20 @@ class FaultPlane:
                 self.duplicated += 1
                 extras = extras + [extras[0] + rng.expovariate(1.0 / max(s.delay, 1e-4))]
         return extras
+
+    def on_timer(self, addr: Address, delay: float) -> float:
+        """Clock-skew interposition: both transports route every timer a
+        node arms through here.  Deterministic (no RNG), so skewed runs
+        replay exactly.  Skewed delays are floored at a positive epsilon:
+        a zero delay would let a self-rearming timer (heartbeats, probe
+        ticks) respawn at the same instant forever — a livelock, not a
+        fast clock."""
+        skew = self._skews.get(addr)
+        if skew is None:
+            return delay
+        scale, offset = skew
+        self.skewed_timers += 1
+        return max(1e-6, delay * scale + offset)
 
 
 # --------------------------------------------------------------------------
@@ -399,16 +442,18 @@ class Nemesis:
             self.plane.partition(f.side_a, f.side_b, symmetric=f.symmetric)
         elif isinstance(f, Storm):
             self.plane.add_storm(f)
+        elif isinstance(f, ClockSkew):
+            self.plane.set_skew(f.addr, f.scale, f.offset)
         elif isinstance(f, Heal):
             self.plane.heal()
         elif isinstance(f, ReconfigureRandom):
-            self.dep.reconfigure_random()
+            self.dep.reconfigure_random(f.shard)
         elif isinstance(f, MMReconfigure):
             self.dep.reconfigure_matchmakers(f.new_set)
         elif isinstance(f, Takeover):
-            p = self.dep.proposers[f.index]
+            p = self.dep.shard_proposers(f.shard)[f.index]
             if not p.failed:
-                p.become_leader(self.dep.random_config())
+                p.become_leader(self.dep.random_config(f.shard))
         elif isinstance(f, StartClients):
             self.dep.start_clients()
         elif isinstance(f, StopClients):

@@ -160,6 +160,9 @@ class AsyncTransport:
     def _set_timer(
         self, src: Address, delay: float, fn: Callable[[], None]
     ) -> _AsyncTimer:
+        if self.faults is not None:
+            # Nemesis clock skew (same interposition as the simulator).
+            delay = self.faults.on_timer(src, delay)
         t = _AsyncTimer()
         node_at_arm = self.nodes.get(src)
         armed_epoch = node_at_arm.life_epoch if node_at_arm is not None else 0

@@ -31,11 +31,14 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from . import messages as m
+from .log import AckTracker, CommandLog, SlotOwnership, SlotState
 from .oracle import Oracle
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
 from .runtime import BatchPolicy, on
 from .sim import Address, Node
+
+__all__ = ["Options", "Proposer", "SlotState"]  # SlotState re-exported from log
 
 
 @dataclass
@@ -55,21 +58,18 @@ class Options:
     # batch_max=1 disables batching (the legacy byte-for-byte behaviour).
     batch_max: int = 1
     batch_flush_interval: float = 100e-6
+    # Adaptive flush: instead of the fixed interval, partial buffers are
+    # flushed on quiescence (when the current causal burst of handlers
+    # drains), trading the fixed-interval latency floor for burst-shaped
+    # batches.  See benchmarks/bench_batching.py for the tradeoff.
+    batch_flush_adaptive: bool = False
 
     def batch_policy(self) -> BatchPolicy:
         return BatchPolicy(
-            max_batch=self.batch_max, flush_interval=self.batch_flush_interval
+            max_batch=self.batch_max,
+            flush_interval=self.batch_flush_interval,
+            adaptive=self.batch_flush_adaptive,
         )
-
-
-@dataclass
-class SlotState:
-    value: Any
-    round: Round
-    config: Configuration
-    acks: Set[Address] = field(default_factory=set)
-    chosen: bool = False
-    is_reproposal: bool = False
 
 
 @dataclass
@@ -111,6 +111,8 @@ class Proposer(Node):
         options: Optional[Options] = None,
         f: int = 1,
         mm_quorum_size: Optional[int] = None,  # Opt 6: default f+1
+        shard: int = 0,
+        num_shards: int = 1,
     ):
         opts = options or Options()
         super().__init__(addr, batch=opts.batch_policy())
@@ -122,6 +124,12 @@ class Proposer(Node):
         self.opt = opts
         self.f = f
         self.mm_quorum = mm_quorum_size or (f + 1)
+        # Sharded log plane: this leader owns only the stride-partition
+        # slots of its shard; all log bookkeeping goes through the
+        # ownership-aware CommandLog (core/log.py).  shard=0/num_shards=1
+        # is the historical own-everything leader.
+        self.shard = shard
+        self.ownership = SlotOwnership(shard, num_shards)
 
         # --- leader state ---
         self.status = IDLE
@@ -130,18 +138,14 @@ class Proposer(Node):
         self.is_leader = False
         self.max_witnessed: Any = NEG_INF
 
-        self.slots: Dict[int, SlotState] = {}
-        self.next_slot = 0
-        self.chosen_values: Dict[int, Any] = {}
-        self.chosen_watermark = 0  # slots < this chosen (contiguous prefix)
+        self.cmdlog = CommandLog(self.ownership)
         self.queued: List[m.Command] = []
 
         self.match_ctx: Optional[MatchCtx] = None
         self.p1_ctx: Optional[Phase1Ctx] = None
 
         # --- replication / GC bookkeeping ---
-        self.replica_acks: Dict[Address, int] = {}
-        self.replicated_watermark = 0  # slots < this on >= f+1 replicas
+        self.ack_tracker = AckTracker()  # slots < watermark on >= f+1 replicas
         self.stored_acks: Dict[Round, Set[Address]] = {}
         self.gc_pending_round: Optional[Round] = None
         self.gc_acks: Dict[Round, Set[Address]] = {}
@@ -163,6 +167,34 @@ class Proposer(Node):
         # --- telemetry ---
         self.reconfig_log: List[Dict[str, float]] = []
         self.stall_count = 0
+
+    # ------------------------------------------------------------------
+    # Log bookkeeping lives in the CommandLog; these views keep the
+    # historical field names (tests, invariant checker, scenario scripts).
+    # ------------------------------------------------------------------
+    @property
+    def slots(self) -> Dict[int, SlotState]:
+        return self.cmdlog.slots
+
+    @property
+    def chosen_values(self) -> Dict[int, Any]:
+        return self.cmdlog.chosen_values
+
+    @property
+    def chosen_watermark(self) -> int:
+        return self.cmdlog.chosen_watermark
+
+    @property
+    def next_slot(self) -> int:
+        return self.cmdlog.next_slot
+
+    @property
+    def replica_acks(self) -> Dict[Address, int]:
+        return self.ack_tracker.acks
+
+    @property
+    def replicated_watermark(self) -> int:
+        return self.ack_tracker.watermark
 
     # ------------------------------------------------------------------
     # Crash/restart fault model (nemesis)
@@ -231,7 +263,9 @@ class Proposer(Node):
             self.recovered = False
             self.recover_acks = {}
             self.broadcast(self.replicas, m.RecoverA())
-        self.broadcast(self.matchmakers, m.MatchA(round=rnd, config=config))
+        self.broadcast(
+            self.matchmakers, m.MatchA(round=rnd, config=config, shard=self.shard)
+        )
         if self.opt.concurrent_matchmaking and not is_takeover and self.config:
             # Opt 5: we know H will contain (at least) our current config —
             # start Phase 1 with it concurrently with the Matchmaking phase.
@@ -252,7 +286,8 @@ class Proposer(Node):
             ctx = self.match_ctx
             if ctx is not None and ctx.round == rnd and not ctx.done and self.is_leader:
                 self.broadcast(
-                    self.matchmakers, m.MatchA(round=rnd, config=ctx.config)
+                    self.matchmakers,
+                    m.MatchA(round=rnd, config=ctx.config, shard=self.shard),
                 )
                 self._resend_timer(rnd)
 
@@ -268,6 +303,12 @@ class Proposer(Node):
     @on(m.Phase1Nack)
     def _on_phase1_nack(self, src: Address, msg: m.Phase1Nack) -> None:
         self._on_nack(msg.witnessed)
+
+    @on(m.Ping)
+    def _on_ping(self, src: Address, msg: m.Ping) -> None:
+        # Failure detectors probe shard leaders directly (shard-aware
+        # failover in coord/control_plane.attach_detector).
+        self.send(src, m.Pong(msg.nonce))
 
     @on(m.Heartbeat)
     def _on_heartbeat(self, src: Address, msg: m.Heartbeat) -> None:
@@ -313,11 +354,22 @@ class Proposer(Node):
             self.stall_count += 1
             self.queued.append(cmd)
 
+    @on(m.FillRequest)
+    def _on_fill_request(self, src: Address, msg: m.FillRequest) -> None:
+        """A replica's execution is blocked on holes below ``msg.slot``
+        (sharded log plane): an idle shard must not stall global
+        execution, so noop-fill every *owned* slot up through the
+        requested frontier (Mencius-style skip).  Slots already claimed
+        are being driven by Phase-2 retries and are left alone."""
+        if not self.is_leader or self.status != STEADY:
+            return
+        while self.next_slot <= msg.slot:
+            self._propose(m.NOOP)  # claim() only ever takes owned slots
+
     def _propose(self, value: Any, slot: Optional[int] = None) -> None:
         assert self.round is not None and self.config is not None
         if slot is None:
-            slot = self.next_slot
-            self.next_slot += 1
+            slot = self.cmdlog.claim()  # next slot this shard owns
         st = SlotState(value=value, round=self.round, config=self.config)
         self.slots[slot] = st
         self._send_phase2a(slot, thrifty=self.opt.thrifty)
@@ -439,8 +491,11 @@ class Proposer(Node):
         floor = max(p1.chosen_watermark, p1.from_slot, self.chosen_watermark)
         max_voted = max(p1.votes.keys(), default=-1)
         horizon = max(max_voted + 1, self.next_slot, floor)
-        self.next_slot = max(self.next_slot, horizon)
-        for slot in range(floor, horizon):
+        self.cmdlog.raise_horizon(horizon)
+        # Only slots this shard OWNS are resolved/noop-filled: a slot owned
+        # by another shard is decided by that shard's acceptor group, and
+        # filling it here would be a double-choose.
+        for slot in self.cmdlog.reproposal_range(floor, horizon):
             existing = self.slots.get(slot)
             if existing is not None and existing.chosen:
                 continue
@@ -507,18 +562,16 @@ class Proposer(Node):
                 config=self.config,
                 chosen=True,
             )
-            self.next_slot = max(self.next_slot, slot + 1)
+            self.cmdlog.note_seen(slot)
         else:
             # A Chosen arrived before our first round is active (e.g. a
             # follower learning from the leader's broadcast): record the
             # value but never fabricate a SlotState with config=None.
-            self.next_slot = max(self.next_slot, slot + 1)
-        self.chosen_values[slot] = value
+            self.cmdlog.note_seen(slot)
+        self.cmdlog.mark_chosen(slot, value)
         if not external:
             self.oracle.on_chosen(slot, value, st.round if st else None, self.now, self.addr)
             self.broadcast(self.replicas, m.Chosen(slot=slot, value=value))
-        while self.chosen_watermark in self.chosen_values:
-            self.chosen_watermark += 1
         self._maybe_gc()
 
     @on(m.Phase2Nack)
@@ -566,9 +619,11 @@ class Proposer(Node):
                         chosen=True,
                     )
                     self.broadcast(self.replicas, m.Chosen(slot=slot, value=value))
-        self.next_slot = max([self.next_slot] + [s + 1 for s in self.chosen_values])
-        while self.chosen_watermark in self.chosen_values:
-            self.chosen_watermark += 1
+        # Recovered entries cover ALL shards' slots; next_slot realigns to
+        # the next slot this shard owns beyond anything seen.
+        for s in self.chosen_values:
+            self.cmdlog.note_seen(s)
+        self.cmdlog.advance_watermark()
         self.recovered = True
         self._maybe_phase1_done()
 
@@ -577,11 +632,8 @@ class Proposer(Node):
     # ------------------------------------------------------------------
     @on(m.ReplicaAck)
     def _on_replica_ack(self, src: Address, msg: m.ReplicaAck) -> None:
-        self.replica_acks[src] = max(self.replica_acks.get(src, 0), msg.watermark)
-        marks = sorted(self.replica_acks.values(), reverse=True)
-        need = min(self.f + 1, len(self.replicas))
-        if len(marks) >= need:
-            self.replicated_watermark = max(self.replicated_watermark, marks[need - 1])
+        self.ack_tracker.observe(src, msg.watermark)
+        self.ack_tracker.quorum_watermark(min(self.f + 1, len(self.replicas)))
         self._maybe_gc()
 
     def _maybe_gc(self) -> None:
@@ -601,8 +653,9 @@ class Proposer(Node):
         p1 = self.p1_ctx
         if p1 is None or not p1.done or p1.round != self.round:
             return
-        # Scenario 1: everything Phase 1 surfaced must be chosen in round i.
-        for slot in range(p1.from_slot, self.next_slot):
+        # Scenario 1: everything Phase 1 surfaced must be chosen in round i
+        # (owned slots only — other shards' slots are other shards' GC).
+        for slot in self.cmdlog.reproposal_range(p1.from_slot, self.next_slot):
             st = self.slots.get(slot)
             if st is None or not st.chosen:
                 if slot < max(p1.votes.keys(), default=-1) + 1 or st is not None:
@@ -621,7 +674,9 @@ class Proposer(Node):
         self.gc_pending_round = self.round
         self.gc_started_at = self.now
         self.gc_acks[self.round] = set()
-        self.broadcast(self.matchmakers, m.GarbageA(round=self.round))
+        self.broadcast(
+            self.matchmakers, m.GarbageA(round=self.round, shard=self.shard)
+        )
 
     @on(m.StoredWatermarkAck)
     def _on_stored_ack(self, src: Address, msg: m.StoredWatermarkAck) -> None:

@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from . import messages as m
+from .log import ExecutionLog
 from .runtime import BatchPolicy, on
 from .sim import Address, Node
 
@@ -50,6 +51,18 @@ class KVStoreSM(StateMachine):
 
 
 class Replica(Node):
+    """Executes the chosen log in slot order.
+
+    Under the sharded log plane (core/log.py) chosen values arrive as
+    interleaved per-shard streams — each shard's leader broadcasts Chosen
+    for its stride-owned slots independently, so the log fills with
+    per-shard holes (a dead shard's slots stay open until its successor
+    noop-fills them).  Execution is pipelined over those streams: entries
+    buffer per shard in the :class:`ExecutionLog` and execute the moment
+    the contiguous prefix reaches them, which keeps the output order
+    invariant under ANY interleaving of the shard streams.
+    """
+
     def __init__(
         self,
         addr: Address,
@@ -57,15 +70,68 @@ class Replica(Node):
         *,
         leader_addrs: Tuple[Address, ...] = (),
         batch: Optional[BatchPolicy] = None,
+        num_shards: int = 1,
+        fill_interval: float = 0.01,
+        ack_stride: int = 1,
     ):
         super().__init__(addr, batch=batch)
         self.sm = sm_factory()
-        self.log: Dict[int, Any] = {}  # slot -> chosen value
-        self.exec_watermark = 0  # slots < this have been executed
+        self.elog = ExecutionLog(num_shards=num_shards)
         self.leader_addrs = leader_addrs
+        # Replication-watermark acks fan out to EVERY shard's proposers;
+        # with many shards that is the replica's dominant egress, so acks
+        # coalesce to every ``ack_stride`` executed slots (stride 1 = the
+        # historical ack-per-progression).  The fill timer flushes the
+        # final partial stride at quiescence.
+        self.ack_stride = max(1, ack_stride)
+        self._last_acked = 0
         self.executed: Dict[Tuple[str, int], Any] = {}  # cmd_id -> result (dedup)
+        # Sharded log plane: an idle shard leaves holes that block the
+        # contiguous execution prefix; if the watermark is stuck with
+        # chosen entries queued behind it, ask the owning shard leader to
+        # noop-fill (Mencius-style skip).  Only armed when sharded.
+        self.fill_interval = fill_interval
+        self._fill_stuck_at = -1
         # telemetry
         self.executions = 0
+        self.fill_requests = 0
+
+    def on_start(self) -> None:
+        if self.elog.num_shards > 1 and self.leader_addrs:
+            self.set_timer(self.fill_interval, self._fill_tick)
+
+    def on_restart(self) -> None:
+        self.on_start()
+
+    def _fill_tick(self) -> None:
+        if self.exec_watermark != self._last_acked:
+            self._send_acks()  # flush the partial ack stride
+        if self.elog.backlog() > 0:
+            if self.elog.watermark == self._fill_stuck_at:
+                # Stuck a full interval: ask every shard to fill its
+                # stream up through the highest slot we know about, so
+                # one round-trip closes every hole below the frontier.
+                self.fill_requests += 1
+                for p in self.leader_addrs:
+                    self.send(p, m.FillRequest(slot=self.elog.max_slot))
+            self._fill_stuck_at = self.elog.watermark
+        else:
+            self._fill_stuck_at = -1
+        self.set_timer(self.fill_interval, self._fill_tick)
+
+    # Historical views: ``log`` is the slot -> value dict, ``exec_watermark``
+    # the executed-prefix bound (tests, invariant checker, recovery).
+    @property
+    def log(self) -> Dict[int, Any]:
+        return self.elog.entries
+
+    @property
+    def exec_watermark(self) -> int:
+        return self.elog.watermark
+
+    def shard_frontiers(self) -> Dict[int, int]:
+        """Per-shard chosen frontier (pipelined-execution telemetry)."""
+        return self.elog.shard_frontiers()
 
     @on(m.RecoverA)
     def _on_recover_a(self, src: Address, msg: m.RecoverA) -> None:
@@ -74,22 +140,24 @@ class Replica(Node):
 
     @on(m.Chosen)
     def _on_chosen(self, src: Address, msg: m.Chosen) -> None:
-        if msg.slot in self.log:
-            assert _value_eq(self.log[msg.slot], msg.value), (
+        prev = self.elog.insert(msg.slot, msg.value)
+        if prev is not None:
+            assert _value_eq(prev, msg.value), (
                 f"SAFETY VIOLATION at replica {self.addr}: slot {msg.slot} "
-                f"chose both {self.log[msg.slot]} and {msg.value}"
+                f"chose both {prev} and {msg.value}"
             )
-        self.log[msg.slot] = msg.value
         progressed = False
-        while self.exec_watermark in self.log:
-            value = self.log[self.exec_watermark]
+        for _slot, value in self.elog.drain_executable():
             self._execute(value)
-            self.exec_watermark += 1
             progressed = True
-        if progressed:
-            # Scenario 3: tell leaders how much of the prefix we hold.
-            for p in self.leader_addrs:
-                self.send(p, m.ReplicaAck(watermark=self.exec_watermark))
+        if progressed and self.exec_watermark - self._last_acked >= self.ack_stride:
+            self._send_acks()
+
+    def _send_acks(self) -> None:
+        # Scenario 3: tell leaders how much of the prefix we hold.
+        self._last_acked = self.exec_watermark
+        for p in self.leader_addrs:
+            self.send(p, m.ReplicaAck(watermark=self.exec_watermark))
 
     def _execute(self, value: Any) -> None:
         self.executions += 1

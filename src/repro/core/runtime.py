@@ -165,6 +165,7 @@ class ProtocolNode:
         self.batch = batch if batch is not None and batch.enabled else None
         self._batch_buf: Dict[Address, List[Any]] = {}
         self._batch_timer: Optional[TimerHandle] = None
+        self._batch_first_at: Optional[float] = None  # adaptive-flush debounce
         # Incremented on every crash(); transports capture it when a timer
         # is armed and refuse to fire timers from a previous life, so a
         # restarted node never runs pre-crash timer chains alongside the
@@ -187,6 +188,7 @@ class ProtocolNode:
         # callbacks while a node is failed, so a stale handle would keep
         # `_buffer` from ever re-arming flushing after recover().
         self._batch_buf.clear()
+        self._batch_first_at = None
         if self._batch_timer is not None:
             self._batch_timer.cancel()
             self._batch_timer = None
@@ -293,6 +295,18 @@ class ProtocolNode:
         buf.append(msg)
         if len(buf) >= self.batch.max_batch:
             self._flush_dst(dst)
+            return
+        if self.batch.adaptive:
+            # Debounced quiescence flush: (re-)arm a short idle timer on
+            # every buffered message; cap the total wait at
+            # flush_interval past the oldest buffered message.
+            if self._batch_first_at is None:
+                self._batch_first_at = self.now
+            if self._batch_timer is not None:
+                self._batch_timer.cancel()
+            cap = self._batch_first_at + self.batch.flush_interval - self.now
+            delay = max(0.0, min(self.batch.quiescence, cap))
+            self._batch_timer = self.set_timer(delay, self._flush_all)
         elif self._batch_timer is None and self.batch.flush_interval > 0:
             self._batch_timer = self.set_timer(
                 self.batch.flush_interval, self._flush_all
@@ -310,6 +324,7 @@ class ProtocolNode:
 
     def _flush_all(self) -> None:
         self._batch_timer = None
+        self._batch_first_at = None
         for dst in list(self._batch_buf):
             self._flush_dst(dst)
 
@@ -329,11 +344,20 @@ ProtocolNode._dispatch_names = {m.Batch: "_on_batch"}
 # Batching policy
 # --------------------------------------------------------------------------
 def _default_batchable() -> Tuple[type, ...]:
-    # The command hot path: leader->acceptor proposals, acceptor->leader
-    # votes, leader->replica choices, and the replicas' per-command
-    # follow-ons (client replies + replication-watermark acks).  All are
-    # idempotent / monotonic, so coalescing never changes semantics.
-    return (m.Phase2A, m.Phase2B, m.Chosen, m.ClientReply, m.ReplicaAck)
+    # The command hot path: client submissions, leader->acceptor
+    # proposals, acceptor->leader votes, leader->replica choices, and the
+    # replicas' per-command follow-ons (client replies + replication-
+    # watermark acks).  All are idempotent / monotonic, so coalescing
+    # never changes semantics.  (ClientRequest only batches for clients
+    # constructed WITH a batch policy — the sharded-throughput workload.)
+    return (
+        m.ClientRequest,
+        m.Phase2A,
+        m.Phase2B,
+        m.Chosen,
+        m.ClientReply,
+        m.ReplicaAck,
+    )
 
 
 @dataclass
@@ -351,12 +375,23 @@ class BatchPolicy:
     max_batch: int = 1
     flush_interval: float = 100e-6
     batchable: Tuple[type, ...] = field(default_factory=_default_batchable)
+    # Adaptive flush: instead of waiting out the fixed ``flush_interval``,
+    # partial buffers drain once the sender has been quiet for
+    # ``quiescence`` seconds (a debounce, re-armed on every buffered
+    # message), with ``flush_interval`` kept as the hard latency cap.
+    # Pure flush-at-instant-end would fragment exponentially in a
+    # pipelined steady state (a batch's acks arrive at slightly different
+    # instants and never re-coalesce); the debounce window re-merges
+    # fragments while still flushing far earlier than the fixed interval.
+    adaptive: bool = False
+    quiescence: float = 50e-6
 
     def __post_init__(self) -> None:
         self.batchable_set = frozenset(self.batchable)
         if self.max_batch > 1 and self.flush_interval <= 0:
             # Without a flush timer, partial buffers below max_batch would
             # be stranded forever — a protocol stall, not a slow path.
+            # (Adaptive mode also uses flush_interval, as its hard cap.)
             raise ValueError(
                 "BatchPolicy with max_batch > 1 requires flush_interval > 0"
             )

@@ -21,7 +21,13 @@ The catalog (paper sections each one stresses):
   acceptor_swap_storm                   Sections 2.1, 4, 8.1
   fast_paxos_recovery                   Section 7 (Algorithm 5)
   gc_during_failover                    Section 5 (Scenarios 1-3)
+  shard_leader_failover                 sharded log plane (ARCHITECTURE)
+  clock_skew_churn                      Section 2.1 (no clock sync)
   ====================================  =============================
+
+Failing schedules shrink: ``shrink_schedule`` bisects a failing
+``(seed, schedule)`` to a minimal event subsequence (ddmin), and
+``shrink_failing_scenario`` wires it to a real scenario re-run.
 
 Every failure raises :class:`ScenarioFailure` whose message leads with the
 one-line ``(seed, schedule)`` replay token; re-running
@@ -40,6 +46,7 @@ from .fast_paxos import FastAcceptor, FastClient, FastCoordinator
 from .matchmaker import Matchmaker
 from .net import AsyncTransport
 from .nemesis import (
+    ClockSkew,
     Crash,
     Event,
     Heal,
@@ -140,12 +147,13 @@ def _kv_op_factory(client_index: int):
 
 def _all_addrs(spec: ClusterSpec) -> Tuple[str, ...]:
     return (
-        spec.proposer_addrs()
-        + spec.acceptor_addrs()
+        spec.all_proposer_addrs()
+        + spec.all_acceptor_addrs()
         + spec.matchmaker_addrs()
         + spec.standby_matchmaker_addrs()
         + spec.replica_addrs()
         + ("mmcoord",)
+        + ((spec.router_addr(),) if spec.num_shards > 1 else ())
         + tuple(f"c{i}" for i in range(spec.n_clients))
     )
 
@@ -283,12 +291,88 @@ def _gc_during_failover(seed: int) -> _Scenario:
     )
 
 
+def _shard_leader_failover(seed: int) -> _Scenario:
+    """Sharded log plane under fire: kill one shard's leader mid-Phase-2
+    while the other shard keeps serving its share of the slot space; the
+    dead shard's follower takes over (full Phase 1 + noop fill-in of the
+    shard's owned holes) and then reconfigures that shard via the shared
+    matchmakers — without touching the surviving shard's configuration.
+    Clients route through the ShardRouter, so the dead window also
+    exercises retry-driven re-routing to the shard's new leader."""
+    rng = _rng("shard_leader_failover", seed)
+    spec = ClusterSpec(
+        f=1,
+        n_clients=4,
+        sm_factory=KVStoreSM,
+        client_retry_timeout=0.06,
+        options=Options(phase2_retry_timeout=0.05),
+        num_shards=2,
+        route_via_router=True,
+    )
+    victim = rng.choice([0, 1])
+    leader = spec.shard_proposer_addrs(victim)[0]
+    clean = rng.random() < 0.3
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.1), Crash(leader, clean=clean)),
+        Event(_jitter(rng, 0.16), Takeover(1, shard=victim)),
+        # Reconfigure the recovered shard via the matchmakers; the other
+        # shard reconfigures too, proving the shared matchmaker set keeps
+        # the per-shard configuration logs independent.
+        Event(_jitter(rng, 0.26), ReconfigureRandom(shard=victim)),
+        Event(_jitter(rng, 0.3), ReconfigureRandom(shard=1 - victim)),
+        Event(_jitter(rng, 0.36), Restart(leader, wipe_volatile=True)),
+        Event(0.5, StopClients()),
+    ]
+    return _Scenario(
+        cluster=spec,
+        schedule=Schedule("shard_leader_failover", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.68,
+        steady_window=(0.02, 0.1),
+        faulty_window=(0.1, 0.45),
+    )
+
+
+def _clock_skew_churn(seed: int) -> _Scenario:
+    """Timer-drift adversary: the leader's clock runs slow (heartbeats,
+    Phase-2 retries and flush timers all late) and one acceptor's runs
+    fast, while reconfigurations churn.  Safety must be untouched — the
+    paper's model has no clock synchronization at all (Section 2.1)."""
+    rng = _rng("clock_skew_churn", seed)
+    spec = _base_cluster()
+    skewed_acc = rng.choice(list(spec.acceptor_addrs()))
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.05), ClockSkew("p0", scale=rng.uniform(1.5, 3.0))),
+        Event(
+            _jitter(rng, 0.07),
+            ClockSkew(skewed_acc, scale=rng.uniform(0.3, 0.8), offset=rng.uniform(0.0, 0.002)),
+        ),
+        Event(_jitter(rng, 0.12), ReconfigureRandom()),
+        Event(_jitter(rng, 0.22), ReconfigureRandom()),
+        Event(_jitter(rng, 0.32), Heal()),
+        Event(_jitter(rng, 0.38), ReconfigureRandom()),
+        Event(0.5, StopClients()),
+    ]
+    return _Scenario(
+        cluster=spec,
+        schedule=Schedule("clock_skew_churn", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.65,
+        steady_window=(0.02, 0.05),
+        faulty_window=(0.05, 0.45),
+    )
+
+
 _BUILDERS: Dict[str, Callable[[int], _Scenario]] = {
     "traffic_during_reconfig": _traffic_during_reconfig,
     "leader_kill9_mid_phase2": _leader_kill9_mid_phase2,
     "mm_reconfig_under_partition": _mm_reconfig_under_partition,
     "acceptor_swap_storm": _acceptor_swap_storm,
     "gc_during_failover": _gc_during_failover,
+    "shard_leader_failover": _shard_leader_failover,
+    "clock_skew_churn": _clock_skew_churn,
 }
 
 SCENARIO_NAMES: Tuple[str, ...] = tuple(_BUILDERS) + ("fast_paxos_recovery",)
@@ -304,15 +388,32 @@ def build_schedule(name: str, seed: int) -> Schedule:
     return _BUILDERS[name](seed).schedule
 
 
-def run_scenario(name: str, seed: int, *, transport: str = "sim") -> ScenarioResult:
+def run_scenario(
+    name: str,
+    seed: int,
+    *,
+    transport: str = "sim",
+    schedule: Optional[Schedule] = None,
+) -> ScenarioResult:
     """Run one adversarial scenario; returns the (unraised) result.
 
     ``transport`` is ``"sim"`` (deterministic, byte-for-byte replayable)
     or ``"async"`` (wall-clock asyncio; safety checks only).
+    ``schedule`` overrides the builder's schedule (same cluster/topology)
+    — the shrinker re-runs a scenario with event subsequences this way.
     """
     if name == "fast_paxos_recovery":
         return _run_fast_paxos(seed, transport)
     sc = _BUILDERS[name](seed)
+    if schedule is not None:
+        sc = _Scenario(
+            cluster=sc.cluster,
+            schedule=schedule,
+            net=sc.net,
+            horizon=sc.horizon,
+            steady_window=sc.steady_window,
+            faulty_window=sc.faulty_window,
+        )
     if transport == "sim":
         t: Any = Simulator(seed=seed, net=sc.net)
     elif transport == "async":
@@ -461,6 +562,80 @@ def _run_fast_paxos(seed: int, transport: str) -> ScenarioResult:
         violations=violations,
         chosen_slots=len(oracle.chosen),
         completed_commands=1 if coord.chosen_value is not None else 0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Schedule shrinking (delta debugging over the event subsequence)
+# --------------------------------------------------------------------------
+def shrink_schedule(
+    schedule: Schedule,
+    still_fails: Callable[[Schedule], bool],
+    *,
+    max_probes: int = 500,
+) -> Schedule:
+    """Reduce a failing schedule to a (1-)minimal event subsequence.
+
+    Bisecting delta debugging (ddmin): repeatedly try dropping chunks of
+    the event list — halves first, then quarters, down to single events —
+    keeping any candidate for which ``still_fails`` still returns True.
+    The result is 1-minimal w.r.t. the probes made: no single remaining
+    event can be removed without the failure disappearing (unless the
+    ``max_probes`` budget ran out first).
+
+    ``still_fails`` receives a Schedule value-equal to the original but
+    for the event subsequence — for a real scenario failure, pass
+    ``lambda s: not run_scenario(name, seed, schedule=s).safe``.  Event
+    timestamps are preserved, so a shrunken schedule replays the same
+    instants the surviving events originally fired at.
+    """
+    events: List[Event] = list(schedule.events)
+
+    def mk(evs: List[Event]) -> Schedule:
+        return Schedule(schedule.name, schedule.seed, tuple(evs))
+
+    probes = 0
+
+    def probe(evs: List[Event]) -> bool:
+        nonlocal probes
+        probes += 1
+        return still_fails(mk(evs))
+
+    n = 2
+    while len(events) >= 1 and probes < max_probes:
+        chunk = max(1, (len(events) + n - 1) // n)
+        removed_any = False
+        i = 0
+        while i < len(events) and probes < max_probes:
+            candidate = events[:i] + events[i + chunk :]
+            if probe(candidate):
+                events = candidate  # chunk was irrelevant; keep it gone
+                removed_any = True
+            else:
+                i += chunk
+        if removed_any:
+            n = max(2, n - 1)  # coarsen back a step, re-scan
+        elif chunk <= 1:
+            break  # single-event granularity and nothing removable
+        else:
+            n = min(n * 2, max(1, len(events)))  # refine
+    return mk(events)
+
+
+def shrink_failing_scenario(
+    name: str, seed: int, *, transport: str = "sim", max_probes: int = 60
+) -> Schedule:
+    """Shrink a real failing (name, seed) run to a minimal schedule.
+
+    Convenience wrapper: the predicate re-runs the scenario with each
+    candidate subsequence on the deterministic simulator and asks whether
+    any invariant still breaks."""
+
+    def still_fails(s: Schedule) -> bool:
+        return not run_scenario(name, seed, transport=transport, schedule=s).safe
+
+    return shrink_schedule(
+        build_schedule(name, seed), still_fails, max_probes=max_probes
     )
 
 

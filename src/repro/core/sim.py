@@ -181,6 +181,10 @@ class Simulator:
         heapq.heappush(self._heap, (when, next(self._seq), fn))
 
     def set_timer(self, node: Node, delay: float, fn: Callable[[], None]) -> Timer:
+        if self.faults is not None:
+            # Nemesis clock skew: a node's local timers drift (scale/offset)
+            # while the network clock stays truthful.
+            delay = self.faults.on_timer(node.addr, delay)
         t = Timer(self.now + delay)
         armed_epoch = node.life_epoch
 

@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Set, Tuple
 
 from . import messages as m
+from .log import CommandLog
 from .oracle import Oracle
 from .quorums import Configuration
 from .rounds import NEG_INF, Round, max_round
@@ -69,8 +70,14 @@ class SingleDecreeProposer(Node):
         self._kv: Any = None
         self._prune_floor: Any = NEG_INF
         self._phase = "idle"
-        self.chosen_value: Any = None
+        # Single-decree = a one-slot CommandLog (the same bookkeeping
+        # abstraction the MultiPaxos and horizontal leaders consume).
+        self.cmdlog = CommandLog()
         self.k_was_neg1 = False
+
+    @property
+    def chosen_value(self) -> Any:
+        return self.cmdlog.chosen_values.get(SLOT)
 
     # ------------------------------------------------------------------
     def propose(self, value: Any) -> None:
@@ -193,7 +200,7 @@ class SingleDecreeProposer(Node):
             return
         self._p2_acks.add(src)
         if self.config.phase2.is_quorum(self._p2_acks):
-            self.chosen_value = self._proposed
+            self.cmdlog.mark_chosen(SLOT, self._proposed)
             self._phase = "done"
             self.oracle.on_chosen(SLOT, self._proposed, self.round, self.now, self.addr)
             if self.gc_enabled:

@@ -84,3 +84,52 @@ def test_quorum_records():
         isinstance(h, QuorumRecord) and h.pod_mask == (1, 0)
         for h in c.ledger().history
     )
+
+
+# --------------------------------------------------------------------------
+# Sharded control plane (the sharded log plane, coord side)
+# --------------------------------------------------------------------------
+def test_sharded_controller_commits_across_shards():
+    c = ClusterController(["pod0", "pod1", "pod2"], num_shards=2, seed=6)
+    for i in range(8):
+        c.commit_step(i)
+    c.sim.run_for(0.1)
+    assert c.ledger().last_step == 7
+    c.check_safety()
+    # both shards actually carry ledger slots
+    fr = c.dep.replicas[0].shard_frontiers()
+    assert sorted(fr) == [0, 1]
+
+
+def test_sharded_reconfigure_swaps_every_shard():
+    c = ClusterController(["pod0", "pod1", "pod2"], num_shards=2, seed=7)
+    tel = c.reconfigure(["pod1", "pod2", "pod3"])
+    assert tel["shards_reconfigured"] == 2 and tel["shards_skipped"] == 0
+    new_pool = set()
+    for p in ("pod1", "pod2", "pod3"):
+        new_pool |= set(c.pods[p].acceptor_addrs)
+    for s in range(2):
+        leader = c.dep.shard_leader(s)
+        assert set(leader.config.acceptors) <= new_pool
+    c.commit_step(1)
+    c.check_safety()
+
+
+def test_reconfigure_promotes_leaderless_shard():
+    """A membership change arriving while one shard has no stable leader
+    must still move that shard: its live proposer is promoted straight
+    onto the new configuration (takeover), never silently skipped."""
+    c = ClusterController(["pod0", "pod1", "pod2"], num_shards=2, seed=8)
+    victim = c.dep.shards[1].proposers[0]
+    assert victim.is_leader
+    c.sim.crash(victim.addr)  # shard 1 now leaderless
+    tel = c.reconfigure(["pod1", "pod2", "pod3"])
+    assert tel["shards_reconfigured"] == 2 and tel["shards_skipped"] == 0
+    l1 = c.dep.shard_leader(1)
+    assert l1.is_leader and not l1.failed and l1.addr != victim.addr
+    new_pool = set()
+    for p in ("pod1", "pod2", "pod3"):
+        new_pool |= set(c.pods[p].acceptor_addrs)
+    assert set(l1.config.acceptors) <= new_pool
+    c.commit_step(1)
+    c.check_safety()

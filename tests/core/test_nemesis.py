@@ -243,3 +243,94 @@ def test_nemesis_event_log_applies_in_order():
     ]
     assert not nem.plane.active
     assert not d.acceptors[0].failed
+
+
+# --------------------------------------------------------------------------
+# Clock skew / timer drift (FaultPlane.on_timer)
+# --------------------------------------------------------------------------
+def test_clock_skew_scales_timer_delays():
+    sim = Simulator(seed=0)
+    node = sim.register(ProtocolNode("n0"))
+    plane = FaultPlane()
+    sim.faults = plane
+    plane.set_skew("n0", scale=2.0)
+    fired = []
+    node.set_timer(0.1, lambda: fired.append(sim.now))
+    sim.run_for(0.15)
+    assert fired == []  # a truthful clock would have fired at 0.1
+    sim.run_for(0.1)
+    assert len(fired) == 1 and abs(fired[0] - 0.2) < 1e-9
+    assert plane.skewed_timers == 1
+
+
+def test_clock_skew_offset_and_floor():
+    plane = FaultPlane()
+    plane.set_skew("x", scale=1.0, offset=0.05)
+    assert abs(plane.on_timer("x", 0.1) - 0.15) < 1e-12
+    # Degenerate skews floor at a positive epsilon — a zero delay would
+    # let self-rearming timers respawn at the same instant (livelock).
+    plane.set_skew("x", scale=0.0, offset=-1.0)
+    assert plane.on_timer("x", 0.1) == 1e-6
+    assert plane.on_timer("y", 0.1) == 0.1  # unskewed nodes untouched
+    plane.set_skew("x")  # identity clears the entry
+    assert not plane.active
+
+
+def test_clock_skew_heal_restores_timers():
+    sim = Simulator(seed=0)
+    node = sim.register(ProtocolNode("n0"))
+    plane = FaultPlane()
+    sim.faults = plane
+    plane.add_storm(Storm(drop=0.0))
+    plane.set_skew("n0", scale=3.0)
+    plane.heal()
+    fired = []
+    node.set_timer(0.1, lambda: fired.append(sim.now))
+    sim.run_for(0.11)
+    assert len(fired) == 1 and abs(fired[0] - 0.1) < 1e-9
+
+
+def test_clock_skew_scenario_seeded_replay():
+    """The clock_skew_churn scenario replays byte-for-byte: skew is a
+    deterministic transform, so (seed, schedule) is still the whole
+    reproduction token."""
+    from repro.core import run_scenario
+
+    a = run_scenario("clock_skew_churn", 5, transport="sim")
+    b = run_scenario("clock_skew_churn", 5, transport="sim")
+    a.raise_if_unsafe()
+    assert build_schedule("clock_skew_churn", 5) == build_schedule(
+        "clock_skew_churn", 5
+    )
+    assert "\n".join(a.event_log) == "\n".join(b.event_log)
+    assert (a.chosen_slots, a.completed_commands) == (
+        b.chosen_slots,
+        b.completed_commands,
+    )
+    # the schedule really does install skews
+    faults = [e.fault for e in build_schedule("clock_skew_churn", 5).events]
+    from repro.core import ClockSkew
+
+    assert sum(isinstance(f, ClockSkew) for f in faults) == 2
+
+
+def test_skewed_leader_behaves_differently_but_safely():
+    """Skewing the leader's clock must change timing-dependent behavior
+    (it IS a fault) while never breaking safety."""
+    from repro.core import ClockSkew as CS
+
+    def run(skewed: bool):
+        d = build(f=1, n_clients=2, seed=11)
+        sched_events = [Event(0.01, CS("p0", scale=4.0))] if skewed else []
+        sched = Schedule("skew-unit", 11, tuple(sched_events))
+        nem = d.attach_nemesis(sched, check=check_invariants)
+        d.start_clients()
+        d.sim.run_for(0.3)
+        d.stop_clients()
+        d.sim.run_for(0.05)
+        assert nem.final_check() == []
+        return sum(len(c.latencies) for c in d.clients), d.sim.messages_sent
+
+    base = run(False)
+    skewed = run(True)
+    assert skewed != base  # timer drift visibly perturbs the run

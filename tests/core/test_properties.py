@@ -1,20 +1,30 @@
-"""Property-based tests for round arithmetic and quorum intersection.
+"""Property-based tests for round arithmetic, quorum intersection, and
+the sharded log plane's algebra.
 
-These are the two algebraic foundations the nemesis invariant checker
-leans on: consensus safety reduces to (a) rounds forming a total order
-with NEG_INF as the least element and proposer-owned successors, and
-(b) every Phase-1 quorum intersecting every Phase-2 quorum in every
-configuration the matchmakers ever hand out (Section 2.3).
+These are the algebraic foundations the nemesis invariant checker leans
+on: consensus safety reduces to (a) rounds forming a total order with
+NEG_INF as the least element and proposer-owned successors, (b) every
+Phase-1 quorum intersecting every Phase-2 quorum in every configuration
+the matchmakers ever hand out (Section 2.3), and — for the sharded log
+plane — (c) stride ownership partitioning the slot space (disjoint and
+covering), with replica execution order invariant under any adversarial
+interleaving of the per-shard chosen streams.
 
 Runs under real hypothesis when installed; under the deterministic
 example-based stub (tests/_hypothesis_stub.py) otherwise.
 """
 
+import random as _random
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import messages as m
+from repro.core.log import ExecutionLog, SlotOwnership, shard_of_slot
 from repro.core.quorums import Configuration, QuorumSpec
+from repro.core.replica import Replica
 from repro.core.rounds import NEG_INF, Round, initial_round, max_round
+from repro.core.sim import Simulator
 
 # Raw (r, proposer, s) tuples; Round is built inside each property so the
 # same strategies work under real hypothesis and the deterministic stub.
@@ -125,6 +135,114 @@ def test_grid_configs_intersect(rows, cols):
     grid = [[f"a{r}_{c}" for c in range(cols)] for r in range(rows)]
     cfg = Configuration.grid(11, grid)
     assert cfg.validate_intersection()
+
+
+# --------------------------------------------------------------------------
+# Sharded log plane: stride ownership partitions the slot space
+# --------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(num_shards=st.integers(1, 9), hi=st.integers(1, 200))
+def test_stride_ownership_partitions_slot_space(num_shards, hi):
+    owners = [SlotOwnership(s, num_shards) for s in range(num_shards)]
+    for slot in range(hi):
+        holders = [o.shard_id for o in owners if o.owns(slot)]
+        # disjoint AND covering: exactly one shard owns every slot
+        assert len(holders) == 1
+        assert holders[0] == shard_of_slot(slot, num_shards)
+
+
+@settings(max_examples=40, deadline=None)
+@given(num_shards=st.integers(1, 8), lo=st.integers(0, 50), span=st.integers(0, 80))
+def test_owned_ranges_tile_every_interval(num_shards, lo, span):
+    hi = lo + span
+    owners = [SlotOwnership(s, num_shards) for s in range(num_shards)]
+    tiles = [list(o.owned_range(lo, hi)) for o in owners]
+    # each shard's tile is sorted, owned, and within bounds
+    for o, tile in zip(owners, tiles):
+        assert tile == sorted(tile)
+        assert all(lo <= s < hi and o.owns(s) for s in tile)
+    # together the tiles are exactly [lo, hi)
+    union = sorted(s for tile in tiles for s in tile)
+    assert union == list(range(lo, hi))
+
+
+@settings(max_examples=30, deadline=None)
+@given(num_shards=st.integers(1, 6), from_slot=st.integers(0, 40))
+def test_first_owned_is_minimal_owned_slot(num_shards, from_slot):
+    for s in range(num_shards):
+        o = SlotOwnership(s, num_shards)
+        fo = o.first_owned(from_slot)
+        assert fo >= from_slot and o.owns(fo)
+        assert not any(o.owns(x) for x in range(from_slot, fo))
+
+
+# --------------------------------------------------------------------------
+# Sharded log plane: replica output order is interleaving-invariant
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    num_shards=st.integers(1, 5),
+    n_slots=st.integers(1, 60),
+    seed=st.integers(0, 10**6),
+)
+def test_execution_order_invariant_under_interleaving(num_shards, n_slots, seed):
+    """Feed the same chosen entries in an adversarial interleaving of the
+    per-shard streams (per-shard order preserved, cross-shard order
+    random); the executed sequence must always be 0..n-1 in slot order."""
+    rng = _random.Random(seed)
+    streams = {
+        s: [slot for slot in range(n_slots) if shard_of_slot(slot, num_shards) == s]
+        for s in range(num_shards)
+    }
+    executed = []
+    elog = ExecutionLog(num_shards=num_shards)
+    cursors = {s: 0 for s in streams}
+    while any(cursors[s] < len(streams[s]) for s in streams):
+        live = [s for s in streams if cursors[s] < len(streams[s])]
+        s = rng.choice(live)
+        slot = streams[s][cursors[s]]
+        cursors[s] += 1
+        elog.insert(slot, f"v{slot}")
+        executed.extend(v for _, v in elog.drain_executable())
+    assert executed == [f"v{slot}" for slot in range(n_slots)]
+    assert elog.watermark == n_slots and elog.backlog() == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(num_shards=st.integers(1, 4), seed=st.integers(0, 10**6))
+def test_replica_sm_output_invariant_under_stream_interleaving(num_shards, seed):
+    """Same property through the full Replica role: whatever order the
+    shard streams' Chosen broadcasts arrive in, the state machine applies
+    commands in slot order and the executed prefix is hole-free."""
+    rng = _random.Random(seed)
+    n_slots = 40
+    values = {
+        slot: m.Command(cmd_id=(f"c{slot % 3}", slot), op=("set", "k", slot))
+        for slot in range(n_slots)
+    }
+    applied_orders = []
+    for trial in range(2):
+        sim = Simulator(seed=0)
+        applied = []
+
+        class RecordingSM:
+            def apply(self, op):
+                applied.append(op[2])
+                return "ok"
+
+        rep = Replica(f"r{trial}", RecordingSM, num_shards=num_shards)
+        sim.register(rep)
+        order = sorted(
+            range(n_slots),
+            key=lambda slot: (rng.random(), slot) if trial else (slot,),
+        )
+        # trial 0: in-order; trial 1: adversarial shuffle (per-shard order
+        # not even preserved — Chosen is idempotent and slot-keyed)
+        for slot in order:
+            rep.on_message("leader", m.Chosen(slot=slot, value=values[slot]))
+        assert rep.exec_watermark == n_slots
+        applied_orders.append(list(applied))
+    assert applied_orders[0] == applied_orders[1] == list(range(n_slots))
 
 
 @settings(max_examples=40, deadline=None)

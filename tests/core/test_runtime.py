@@ -311,3 +311,87 @@ def test_asyncio_transport_with_batching():
     dep.check_all()
     assert dep.clients[0].done
     assert len(dep.oracle.chosen) == 12
+
+
+# --------------------------------------------------------------------------
+# Adaptive (quiescence-debounced) flush
+# --------------------------------------------------------------------------
+def test_adaptive_flush_drains_on_quiescence():
+    """Messages buffered in one burst flush after the quiescence window,
+    not the (much longer) fixed interval."""
+    sim = Simulator(seed=0)
+    node = sim.register(
+        ProtocolNode(
+            "n0",
+            batch=BatchPolicy(
+                max_batch=16, flush_interval=1.0, adaptive=True, quiescence=1e-4
+            ),
+        )
+    )
+    sim.register(ProtocolNode("r0"))
+    for slot in range(3):
+        node.send("r0", m.Chosen(slot=slot, value="v"))
+    sim.run_for(0.01)  # far less than flush_interval=1.0
+    assert sim.messages_delivered == 1  # one Batch envelope
+    assert node.batches_sent == 1
+
+
+def test_adaptive_flush_debounce_recoalesces_trickle():
+    """Messages arriving within the quiescence window of each other merge
+    into one envelope (the anti-fragmentation property)."""
+    sim = Simulator(seed=0)
+    node = sim.register(
+        ProtocolNode(
+            "n0",
+            batch=BatchPolicy(
+                max_batch=16, flush_interval=1.0, adaptive=True, quiescence=1e-3
+            ),
+        )
+    )
+    sim.register(ProtocolNode("r0"))
+    for k in range(5):
+        sim.call_at(
+            1e-4 * k, lambda k=k: node.send("r0", m.Chosen(slot=k, value="v"))
+        )
+    sim.run_for(0.05)
+    assert node.batches_sent == 1
+    assert sim.messages_delivered == 1
+
+
+def test_adaptive_flush_hard_cap_is_flush_interval():
+    """A steady sub-quiescence trickle cannot postpone flushing past
+    flush_interval from the oldest buffered message."""
+    sim = Simulator(seed=0)
+    node = sim.register(
+        ProtocolNode(
+            "n0",
+            batch=BatchPolicy(
+                max_batch=1000, flush_interval=5e-3, adaptive=True, quiescence=1e-3
+            ),
+        )
+    )
+    sim.register(ProtocolNode("r0"))
+    # send every 0.5ms (< quiescence) forever: only the cap can flush
+    def trickle(k=0):
+        node.send("r0", m.Chosen(slot=k, value="v"))
+        sim.call_at(sim.now + 5e-4, lambda: trickle(k + 1))
+
+    trickle()
+    sim.run_for(6e-3)
+    assert node.batches_sent >= 1  # cap fired within flush_interval
+    assert sim.messages_delivered >= 1
+
+
+def test_adaptive_flush_still_requires_interval():
+    try:
+        BatchPolicy(max_batch=8, flush_interval=0.0, adaptive=True)
+        raised = False
+    except ValueError:
+        raised = True
+    assert raised
+
+
+def test_adaptive_options_plumb_through():
+    opts = Options(batch_max=8, batch_flush_adaptive=True)
+    policy = opts.batch_policy()
+    assert policy.adaptive and policy.enabled

@@ -125,3 +125,115 @@ def test_throughput_fields_populated():
     res = run_scenario("traffic_during_reconfig", 0, transport="sim")
     assert res.steady_throughput > 0
     assert res.faulty_throughput > 0
+
+
+# --------------------------------------------------------------------------
+# Schedule shrinking (bisecting delta debugging)
+# --------------------------------------------------------------------------
+def test_shrinker_reduces_synthetic_failure_to_minimal_pair():
+    """A synthetic failure that needs exactly one Crash AND one Restart:
+    the shrinker must strip the other eight events and keep those two."""
+    from repro.core.nemesis import Crash, Event, Heal, Restart, Schedule
+    from repro.core.scenarios import shrink_schedule
+
+    key_crash = Event(0.10, Crash("p0", clean=False))
+    key_restart = Event(0.30, Restart("p0", wipe_volatile=True))
+    noise = [
+        Event(0.01 + 0.02 * i, Heal()) for i in range(8)
+    ]
+    events = tuple(sorted(noise + [key_crash, key_restart], key=lambda e: e.at))
+    sched = Schedule("synthetic", 0, events)
+
+    probes = []
+
+    def still_fails(s):
+        probes.append(len(s.events))
+        evs = set(s.events)
+        return key_crash in evs and key_restart in evs
+
+    shrunk = shrink_schedule(sched, still_fails)
+    assert set(shrunk.events) == {key_crash, key_restart}
+    # chronology and identity preserved
+    assert shrunk.events == (key_crash, key_restart)
+    assert shrunk.name == "synthetic" and shrunk.seed == 0
+    assert probes, "the shrinker never probed"
+
+
+def test_shrinker_keeps_order_dependent_subsequence():
+    """Failure requires a crash happening before a heal: the shrinker
+    must preserve relative order while dropping unrelated events."""
+    from repro.core.nemesis import Crash, Event, Heal, Restart, Schedule
+    from repro.core.scenarios import shrink_schedule
+
+    evs = [
+        Event(0.01, Heal()),
+        Event(0.02, Crash("a0")),
+        Event(0.03, Restart("a0")),
+        Event(0.04, Crash("p1")),
+        Event(0.05, Heal()),
+        Event(0.06, Restart("p1")),
+    ]
+    sched = Schedule("ordered", 1, tuple(evs))
+
+    def still_fails(s):
+        kinds = [type(e.fault).__name__ for e in s.events]
+        # needs some Crash followed (later) by some Heal
+        for i, k in enumerate(kinds):
+            if k == "Crash" and "Heal" in kinds[i + 1 :]:
+                return True
+        return False
+
+    shrunk = shrink_schedule(sched, still_fails)
+    kinds = [type(e.fault).__name__ for e in shrunk.events]
+    assert kinds == ["Crash", "Heal"]
+    assert shrunk.events[0].at < shrunk.events[1].at
+
+
+def test_shrinker_single_event_failure():
+    from repro.core.nemesis import Crash, Event, Heal, Schedule
+    from repro.core.scenarios import shrink_schedule
+
+    key = Event(0.2, Crash("r0"))
+    evs = tuple([Event(0.01 * i, Heal()) for i in range(10)] + [key])
+    shrunk = shrink_schedule(
+        Schedule("one", 2, evs), lambda s: key in s.events
+    )
+    assert shrunk.events == (key,)
+
+
+def test_shrinker_respects_probe_budget():
+    from repro.core.nemesis import Event, Heal, Schedule
+    from repro.core.scenarios import shrink_schedule
+
+    evs = tuple(Event(0.01 * i, Heal()) for i in range(64))
+    calls = []
+
+    def still_fails(s):
+        calls.append(1)
+        return len(s.events) >= 60  # shrinks a little, then plateaus
+
+    shrink_schedule(Schedule("budget", 3, evs), still_fails, max_probes=25)
+    assert len(calls) <= 26
+
+
+def test_shrink_failing_scenario_runs_real_replays():
+    """Wire the shrinker to a real scenario run whose predicate is
+    synthetic (violations are rare by design): 'fails' iff the schedule
+    still contains a StopClients event.  Exercises run_scenario's
+    schedule override end-to-end."""
+    from repro.core.nemesis import StopClients
+    from repro.core.scenarios import build_schedule, shrink_schedule
+    from repro.core import run_scenario
+
+    name, seed = "traffic_during_reconfig", 1
+
+    def still_fails(s):
+        res = run_scenario(name, seed, schedule=s)
+        assert res.safe  # the protocol itself stays safe on every subset
+        return any(isinstance(e.fault, StopClients) for e in s.events)
+
+    shrunk = shrink_schedule(
+        build_schedule(name, seed), still_fails, max_probes=20
+    )
+    assert len(shrunk.events) == 1
+    assert isinstance(shrunk.events[0].fault, StopClients)
