@@ -10,8 +10,20 @@ modelling serialization/syscall cost; we sweep ``Options.batch_max``.
 
 Acceptance anchor: batch size 16 must be >= 2x batch size 1.
 
-Emits ``BENCH_batching.json`` (the throughput curve) next to the CSV row
-per batch size.
+Three flush/coalescing disciplines sweep the latency/throughput Pareto
+frontier (the ``pareto`` section of the JSON):
+
+  * **fixed** — partial buffers drain on the fixed flush interval;
+  * **adaptive** — quiescence-debounced flush (PR 3);
+  * **coalescing** — client-side request coalescing at the ShardRouter
+    (the ROADMAP batching extension): four independent clients' commands
+    merge into one leader batch at the router, so the leader's ingress
+    cost amortizes across clients *before* the leader ever batches its
+    own egress.  Toggleable via ``run_coalesced(coalesce=False)`` for
+    the on/off comparison at the same topology.
+
+Emits ``BENCH_batching.json`` (the curves + the Pareto points) next to
+the CSV row per batch size.
 """
 
 from __future__ import annotations
@@ -30,6 +42,12 @@ BATCH_SIZES = (1, 2, 4, 8, 16, 32)
 WINDOW = 64
 PER_MSG_OVERHEAD = 20e-6  # sender-side serialization cost per wire message
 FLUSH_INTERVAL = 600e-6
+# Coalescing sweep: independent clients, each with a WINDOW-deep
+# pipeline, whose requests merge at the router.  The pipeline must be
+# deep enough that the router's per-frame egress ceiling (1/overhead
+# ~ 50k frames/s) binds — that ceiling is exactly what coalescing lifts.
+CO_CLIENTS = 4
+CO_WINDOW = WINDOW
 
 
 def run_one(
@@ -79,6 +97,66 @@ def run_one(
     }
 
 
+def run_coalesced(
+    batch_max: int,
+    *,
+    coalesce: bool = True,
+    seed: int = 0,
+    duration: float = 0.4,
+    n_clients: int = CO_CLIENTS,
+    window: int = CO_WINDOW,
+    overhead: float = PER_MSG_OVERHEAD,
+) -> Dict[str, float]:
+    """Distinct clients -> ShardRouter -> single leader, with the router
+    merging the clients' requests into one leader batch (``coalesce=True``)
+    or forwarding one frame per request (``coalesce=False``)."""
+    opts = Options(batch_max=batch_max, batch_flush_interval=FLUSH_INTERVAL)
+    spec = ClusterSpec(
+        f=1,
+        n_clients=0,
+        options=opts,
+        auto_elect_leader=False,
+        route_via_router=True,
+        router_coalesce=coalesce,
+    )
+    sim = Simulator(seed=seed, net=NetworkConfig(per_msg_overhead=overhead))
+    dep = spec.instantiate(sim)
+    dep.proposers[0].become_leader(
+        dep.fresh_config([a.addr for a in dep.acceptors[:3]])
+    )
+    sim.run_for(0.01)
+
+    router_addr = spec.router_addr()
+    clients = []
+    for i in range(n_clients):
+        c = PipelinedClient(f"c{i}", lambda: router_addr, window=window)
+        sim.register(c)
+        clients.append(c)
+    for c in clients:
+        c.start()
+    sim.run_for(duration)
+    for c in clients:
+        c.stop()
+    sim.run_for(0.05)
+
+    dep.clients.extend(clients)
+    dep.check_all()
+
+    completed = sum(c.completed for c in clients)
+    lat = Deployment.summary([l for c in clients for (_, l) in c.latencies])
+    return {
+        "batch_max": batch_max,
+        "coalesce": coalesce,
+        "clients": n_clients,
+        "commands_per_sec": completed / duration,
+        "completed": completed,
+        "wire_messages": sim.messages_sent,
+        "router_batches": dep.router.batches_sent if dep.router else 0,
+        "median_latency_ms": lat["median"] * 1e3,
+        "iqr_latency_ms": lat["iqr"] * 1e3,
+    }
+
+
 def main(fast: bool = True) -> List[Dict[str, float]]:
     duration = common.t(10.0) if not fast else 0.4
     curve = []
@@ -106,12 +184,44 @@ def main(fast: bool = True) -> List[Dict[str, float]]:
         )
         adaptive_curve.append(row)
         common.record("batching_adaptive", **row)
+    # Client-side request coalescing at the router (on/off at the same
+    # multi-client topology), one point per batch size.
+    coalesce_curve = []
+    coalesce_off_curve = []
+    for b in BATCH_SIZES:
+        on = run_coalesced(b, coalesce=True, duration=duration)
+        off = run_coalesced(b, coalesce=False, duration=duration)
+        on["speedup_vs_uncoalesced"] = (
+            on["commands_per_sec"] / off["commands_per_sec"]
+            if off["commands_per_sec"]
+            else 0.0
+        )
+        coalesce_curve.append(on)
+        coalesce_off_curve.append(off)
+        common.record("batching_coalesce", **on)
+    # The latency/throughput Pareto frontier across all disciplines.
+    pareto = [
+        {
+            "discipline": disc,
+            "batch_max": r["batch_max"],
+            "commands_per_sec": r["commands_per_sec"],
+            "median_latency_ms": r["median_latency_ms"],
+        }
+        for disc, rows in (
+            ("fixed", curve),
+            ("adaptive", adaptive_curve),
+            ("coalescing", coalesce_curve),
+            ("coalescing_off", coalesce_off_curve),
+        )
+        for r in rows
+    ]
     out = os.environ.get("BENCH_BATCHING_JSON", "BENCH_batching.json")
     with open(out, "w") as fh:
         json.dump(
             {
                 "workload": {
                     "clients": 1,
+                    "coalesce_clients": CO_CLIENTS,
                     "window": WINDOW,
                     "per_msg_overhead_s": PER_MSG_OVERHEAD,
                     "flush_interval_s": FLUSH_INTERVAL,
@@ -119,6 +229,9 @@ def main(fast: bool = True) -> List[Dict[str, float]]:
                 },
                 "curve": curve,
                 "adaptive_curve": adaptive_curve,
+                "coalesce_curve": coalesce_curve,
+                "coalesce_off_curve": coalesce_off_curve,
+                "pareto": pareto,
             },
             fh,
             indent=2,

@@ -1,0 +1,190 @@
+"""Wire plane: binary codec vs pickle, and real-socket throughput.
+
+Two measurements, both feeding ``BENCH_wire.json``:
+
+1. **Codec micro-benchmark** — encode/decode wall time and encoded size
+   for the hot-path message shapes (a bare Phase2A, a batch-16 Phase2A
+   frame, a ClientReply, a MatchB with history), binary wire codec vs
+   ``pickle`` (protocol 5).  The acceptance bar is the *size* win —
+   pickle's payload carries class/module names per object, the wire
+   format carries a one-byte tag and interned strings.  The measured
+   per-frame vs marginal per-message encode cost is what grounds the
+   simulator's egress-coalescing cost model
+   (``NetworkConfig.coalesce_cost``).
+
+2. **TCP smoke throughput** — the full paper topology (f=1) served over
+   ``tcp.TcpTransport``: real per-node loopback sockets, binary frames,
+   pipelined clients.  Reported as commands/sec of *wall* time — this is
+   a real deployment number, not a simulated one, so it is measured, not
+   modelled.
+
+``--smoke`` keeps the TCP run short for CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import sys
+import time
+from typing import Any, Dict, List
+
+from repro.core import ClusterSpec, NetworkConfig, PipelinedClient, wire
+from repro.core import messages as m
+from repro.core.proposer import Options
+from repro.core.quorums import Configuration
+from repro.core.rounds import Round
+from repro.core.tcp import TcpTransport
+
+from . import common
+
+
+# --------------------------------------------------------------------------
+# Codec micro-benchmark
+# --------------------------------------------------------------------------
+def _hot_messages() -> Dict[str, Any]:
+    rnd = Round(3, 1, 2)
+    cfg = Configuration.majority(7, ("a0", "a1", "a2", "a3", "a4"))
+    return {
+        "Phase2A": m.Phase2A(
+            round=rnd, slot=12345, value=m.Command(("c0", 678), b"\x00")
+        ),
+        "Phase2B": m.Phase2B(round=rnd, slot=12345),
+        "Chosen": m.Chosen(slot=12345, value=m.Command(("c0", 678), b"\x00")),
+        "ClientReply": m.ClientReply(cmd_id=("c0", 678), result="ok", slot=12345),
+        "MatchB(hist=3)": m.MatchB(
+            round=rnd,
+            gc_watermark=Round(1, 0, 0),
+            history=tuple((Round(1, 0, s), cfg) for s in range(3)),
+        ),
+        "Batch[16xPhase2A]": m.Batch(
+            messages=tuple(
+                m.Phase2A(round=rnd, slot=s, value=m.Command(("c0", s), b"\x00"))
+                for s in range(16)
+            )
+        ),
+    }
+
+
+def _time_per_op(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_codec(reps: int = 2000) -> List[Dict[str, float]]:
+    rows = []
+    for name, msg in _hot_messages().items():
+        wire_bytes = wire.encode(msg)
+        pickle_bytes = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+        row = {
+            "message": name,
+            "wire_bytes": len(wire_bytes),
+            "pickle_bytes": len(pickle_bytes),
+            "size_ratio_pickle_over_wire": len(pickle_bytes) / len(wire_bytes),
+            "wire_encode_us": _time_per_op(lambda: wire.encode(msg), reps) * 1e6,
+            "wire_decode_us": _time_per_op(lambda: wire.decode(wire_bytes), reps)
+            * 1e6,
+            "pickle_encode_us": _time_per_op(
+                lambda: pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL), reps
+            )
+            * 1e6,
+            "pickle_decode_us": _time_per_op(
+                lambda: pickle.loads(pickle_bytes), reps
+            )
+            * 1e6,
+        }
+        rows.append(row)
+        common.record("wire_codec", **row)
+    return rows
+
+
+def marginal_vs_frame_cost(rows: List[Dict[str, float]]) -> Dict[str, float]:
+    """The coalescing cost model, measured: a batch-16 frame's encode
+    time vs 16 standalone frames gives the marginal per-sub-message
+    fraction that ``NetworkConfig.coalesce_cost`` models."""
+    single = next(r for r in rows if r["message"] == "Phase2A")
+    batch = next(r for r in rows if r["message"] == "Batch[16xPhase2A]")
+    marginal_us = (batch["wire_encode_us"] - single["wire_encode_us"]) / 15.0
+    return {
+        "frame_encode_us": single["wire_encode_us"],
+        "marginal_submsg_encode_us": marginal_us,
+        "marginal_fraction": marginal_us / single["wire_encode_us"]
+        if single["wire_encode_us"]
+        else 0.0,
+    }
+
+
+# --------------------------------------------------------------------------
+# Real-socket TCP throughput (wall time — measured, not modelled)
+# --------------------------------------------------------------------------
+def bench_tcp(duration: float = 2.0, *, n_clients: int = 4, window: int = 32):
+    opts = Options(batch_max=16, batch_flush_interval=2e-3)
+    spec = ClusterSpec(
+        f=1,
+        n_clients=0,
+        options=opts,
+        auto_elect_leader=True,
+        client_retry_timeout=0.5,
+    )
+    t = TcpTransport(seed=0, net=NetworkConfig())
+    dep = spec.instantiate(t)
+    clients = [
+        PipelinedClient(
+            f"c{i}",
+            lambda: dep.leader.addr,
+            window=window,
+            batch=opts.batch_policy(),
+        )
+        for i in range(n_clients)
+    ]
+    for c in clients:
+        t.register(c)
+        c.start()
+    elapsed = t.run(duration)
+    completed = sum(c.completed for c in clients)
+    dep.clients.extend(clients)
+    dep.check_all()  # safety holds over real sockets too
+    lat = sorted(l for c in clients for (_, l) in c.latencies)
+    row = {
+        "transport": "tcp",
+        "duration_s": elapsed,
+        "commands_per_sec_wall": completed / elapsed if elapsed else 0.0,
+        "completed": completed,
+        "frames_sent": t.frames_sent,
+        "bytes_sent": t.bytes_sent,
+        "bytes_per_command": t.bytes_sent / completed if completed else 0.0,
+        "median_latency_ms": (lat[len(lat) // 2] * 1e3) if lat else 0.0,
+    }
+    common.record("wire_tcp", **row)
+    return row
+
+
+def main(fast: bool = True, smoke: bool = False) -> Dict[str, Any]:
+    reps = 500 if smoke else 2000
+    codec_rows = bench_codec(reps=reps)
+    model = marginal_vs_frame_cost(codec_rows)
+    tcp_row = bench_tcp(duration=0.8 if smoke else (2.0 if fast else common.t(10.0)))
+    out = os.environ.get("BENCH_WIRE_JSON", "BENCH_wire.json")
+    doc = {
+        "codec": codec_rows,
+        "coalescing_cost_model": model,
+        "tcp": tcp_row,
+    }
+    with open(out, "w") as fh:
+        json.dump(doc, fh, indent=2)
+    return doc
+
+
+if __name__ == "__main__":
+    doc = main(smoke="--smoke" in sys.argv)
+    common.emit_csv()
+    worst = min(r["size_ratio_pickle_over_wire"] for r in doc["codec"])
+    print(f"\nworst-case size win vs pickle: {worst:.2f}x", file=sys.stderr)
+    print(
+        f"tcp wall throughput: {doc['tcp']['commands_per_sec_wall']:.0f} cmds/s, "
+        f"{doc['tcp']['bytes_per_command']:.0f} B/cmd",
+        file=sys.stderr,
+    )

@@ -36,6 +36,7 @@ def main() -> None:
         bench_roofline,
         bench_sharding,
         bench_thriftiness,
+        bench_wire,
         common,
     )
 
@@ -48,6 +49,7 @@ def main() -> None:
         ("sec7 fast paxos", bench_fast_paxos.main),
         ("fig14 thriftiness", bench_thriftiness.main),
         ("sec8 hot-path batching", bench_batching.main),
+        ("wire plane codec + tcp", bench_wire.main),
         ("sharded log plane", bench_sharding.main),
         ("sec8 reconfiguration under fire", bench_nemesis.main),
         ("elastic control plane", bench_elastic.main),

@@ -3,8 +3,9 @@
 # Protocol logic lives in pure-kernel role classes (runtime.ProtocolNode);
 # I/O is an exchangeable Transport (sim.Simulator / net.AsyncTransport).
 from .acceptor import Acceptor
+from . import wire
 from .client import Client, PipelinedClient, ShardRouter, shard_of_command
-from .deploy import ClusterSpec, Deployment, Shard, build
+from .deploy import ClusterSpec, Deployment, Shard, build, make_transport
 from .fast_paxos import FastAcceptor, FastClient, FastCoordinator
 from .horizontal import ConfigChange, HorizontalProposer
 from .log import (
@@ -20,6 +21,7 @@ from .mm_reconfig import MMReconfigCoordinator
 from .nemesis import (
     ClockSkew,
     Crash,
+    DiskLoss,
     FaultPlane,
     Heal,
     Nemesis,
@@ -30,6 +32,7 @@ from .nemesis import (
     check_invariants,
 )
 from .net import AsyncTransport
+from .tcp import TcpTransport
 from .oracle import Oracle, SafetyViolation
 from .proposer import Options, Proposer
 from .quorums import Configuration, QuorumSpec
@@ -53,6 +56,7 @@ from .scenarios import (
     run_scenario,
     shrink_failing_scenario,
     shrink_schedule,
+    shrink_timing,
 )
 from .sim import NetworkConfig, Node, Simulator
 from .single import SingleDecreeProposer
@@ -60,16 +64,18 @@ from .single import SingleDecreeProposer
 __all__ = [
     "AckTracker", "Acceptor", "AsyncTransport", "BatchPolicy", "Broadcast",
     "CancelTimer", "Client", "ClockSkew", "ClusterSpec", "CommandLog",
-    "ConfigChange", "Configuration", "Crash", "Deployment", "ExecutionLog",
-    "FastAcceptor", "FastClient", "FastCoordinator", "FaultPlane", "Heal",
-    "HorizontalProposer", "KVStoreSM", "MMReconfigCoordinator", "Matchmaker",
-    "NEG_INF", "Nemesis", "NetworkConfig", "Node", "NoopSM", "Options",
-    "Oracle", "Partition", "PipelinedClient", "ProtocolNode", "Proposer",
-    "QuorumSpec", "Replica", "Restart", "Round", "SCENARIO_NAMES",
-    "SafetyViolation", "ScenarioFailure", "ScenarioResult", "Schedule",
-    "Send", "SetTimer", "Shard", "ShardRouter", "Simulator",
-    "SingleDecreeProposer", "SlotOwnership", "SlotState", "StateMachine",
-    "Storm", "Transport", "build", "check_invariants", "initial_round",
-    "max_round", "on", "run_matrix", "run_scenario", "shard_of_command",
-    "shard_of_slot", "shrink_failing_scenario", "shrink_schedule",
+    "ConfigChange", "Configuration", "Crash", "Deployment", "DiskLoss",
+    "ExecutionLog", "FastAcceptor", "FastClient", "FastCoordinator",
+    "FaultPlane", "Heal", "HorizontalProposer", "KVStoreSM",
+    "MMReconfigCoordinator", "Matchmaker", "NEG_INF", "Nemesis",
+    "NetworkConfig", "Node", "NoopSM", "Options", "Oracle", "Partition",
+    "PipelinedClient", "ProtocolNode", "Proposer", "QuorumSpec", "Replica",
+    "Restart", "Round", "SCENARIO_NAMES", "SafetyViolation",
+    "ScenarioFailure", "ScenarioResult", "Schedule", "Send", "SetTimer",
+    "Shard", "ShardRouter", "Simulator", "SingleDecreeProposer",
+    "SlotOwnership", "SlotState", "StateMachine", "Storm", "TcpTransport",
+    "Transport", "build", "check_invariants", "initial_round",
+    "make_transport", "max_round", "on", "run_matrix", "run_scenario",
+    "shard_of_command", "shard_of_slot", "shrink_failing_scenario",
+    "shrink_schedule", "shrink_timing", "wire",
 ]

@@ -45,14 +45,23 @@ class ShardRouter(Node):
     router is on the request path only), and retries re-route — a request
     hitting a dead shard leader is re-forwarded to the shard's new leader
     on the client's next retransmission.
+
+    Request coalescing (the ROADMAP batching extension): constructed
+    *with* a batch policy, the router merges distinct clients' commands
+    bound for the same shard leader into one ``messages.Batch`` — the
+    leader's ingress becomes one wire frame per coalesced burst.  Node-
+    level batching is per destination, so commands for different shards
+    never share a frame.
     """
 
     def __init__(
         self,
         addr: Address,
         leader_providers: Sequence[Callable[[], Optional[Address]]],
+        *,
+        batch=None,
     ):
-        super().__init__(addr)
+        super().__init__(addr, batch=batch)
         self.leader_providers = list(leader_providers)
         # telemetry
         self.routed = 0

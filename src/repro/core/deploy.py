@@ -189,15 +189,44 @@ class Deployment:
         self.oracle.check_client_results(self.clients)
 
 
+def make_transport(
+    backend: str = "sim",
+    *,
+    seed: int = 0,
+    net: Optional[NetworkConfig] = None,
+) -> Transport:
+    """Construct a runtime transport by name.
+
+    ``"sim"`` — the deterministic discrete-event simulator;
+    ``"async"`` — the in-process asyncio event loop (``net.AsyncTransport``);
+    ``"tcp"`` — real sockets, one per node, binary wire frames
+    (``tcp.TcpTransport``).  All three run the same role classes and the
+    same nemesis fault schedules.
+    """
+    if backend == "sim":
+        return Simulator(seed=seed, net=net)
+    if backend == "async":
+        from .net import AsyncTransport  # deploy is imported by net users
+
+        return AsyncTransport(seed=seed, net=net)
+    if backend == "tcp":
+        from .tcp import TcpTransport
+
+        return TcpTransport(seed=seed, net=net)
+    raise ValueError(f"unknown transport backend {backend!r}")
+
+
 @dataclass
 class ClusterSpec:
     """Declarative description of a paper-topology cluster.
 
     ``instantiate(transport)`` wires the role nodes onto any runtime
-    transport; the same spec builds a deterministic simulation or an
-    in-process asyncio deployment (``net.AsyncTransport``).  All knobs of
-    the historical ``build(...)`` entry point live here, plus the
-    client-shape knobs used by the batching benchmark.
+    transport; the same spec builds a deterministic simulation, an
+    in-process asyncio deployment (``net.AsyncTransport``), or a real
+    socket-per-node TCP deployment (``tcp.TcpTransport``) — see
+    ``deploy(backend=...)``.  All knobs of the historical ``build(...)``
+    entry point live here, plus the client-shape knobs used by the
+    batching benchmark.
     """
 
     f: int = 1
@@ -214,9 +243,17 @@ class ClusterSpec:
     # own f+1 proposers and acceptor pool) that share the matchmaker set
     # and the replicas.  num_shards=1 is the historical deployment,
     # byte-for-byte.  ``route_via_router`` sends client traffic through
-    # the ShardRouter node instead of routing client-side.
+    # the ShardRouter node instead of routing client-side (with
+    # num_shards=1 the router simply fronts the single leader).
     num_shards: int = 1
     route_via_router: bool = False
+    # Client-side request coalescing at the router (ROADMAP batching
+    # extension): the router merges *distinct clients'* commands bound
+    # for the same shard leader into one Batch frame, so the leader's
+    # ingress is one wire message per coalesced burst instead of one per
+    # client.  Uses the deployment's batch policy; requires
+    # route_via_router and an Options.batch_max > 1 to have any effect.
+    router_coalesce: bool = False
 
     # -- address plan ----------------------------------------------------
     def matchmaker_addrs(self) -> Tuple[str, ...]:
@@ -292,6 +329,7 @@ class ClusterSpec:
                 a,
                 self.sm_factory,
                 leader_addrs=all_prop_addrs,
+                peers=rep_addrs,
                 batch=batch,
                 num_shards=S,
                 # Sharded: coalesce watermark acks (they fan out to every
@@ -343,13 +381,14 @@ class ClusterSpec:
             return shard_leader_addr(0)
 
         router: Optional[ShardRouter] = None
-        if S > 1:
+        if S > 1 or self.route_via_router:
             router = ShardRouter(
                 self.router_addr(),
                 [lambda s=s: shard_leader_addr(s) for s in range(S)],
+                batch=batch if self.router_coalesce else None,
             )
 
-        if S > 1 and self.route_via_router:
+        if self.route_via_router:
             leader_provider = lambda: self.router_addr()  # noqa: E731
             route = None
         elif S > 1:
@@ -406,6 +445,20 @@ class ClusterSpec:
                     dep.fresh_config([a.addr for a in sh.acceptors[: 2 * f + 1]])
                 )
         return dep
+
+    def deploy(
+        self,
+        backend: str = "sim",
+        *,
+        seed: int = 0,
+        net: Optional[NetworkConfig] = None,
+    ) -> Tuple[Transport, Deployment]:
+        """One-call backend-parameterized construction: build the named
+        transport (``"sim"`` / ``"async"`` / ``"tcp"``) and instantiate
+        this spec on it.  Returns ``(transport, deployment)`` — drive the
+        transport (``run_for`` / ``run``) yourself."""
+        transport = make_transport(backend, seed=seed, net=net)
+        return transport, self.instantiate(transport)
 
 
 def build(

@@ -114,6 +114,24 @@ class ClockSkew:
 
 
 @dataclass(frozen=True)
+class DiskLoss:
+    """Replica ``addr`` loses its persisted log (disk wipe).
+
+    The paper's crash-recovery model assumes synchronously persisted
+    state survives a restart; this fault breaks that assumption for one
+    replica: its log, state machine and at-most-once dedup table are
+    wiped, and on its next (re)start it re-syncs the chosen prefix from
+    its peer replicas (``RecoverA``/``RecoverB``) before serving again.
+    Safety must hold throughout — in particular the GC durability bar
+    (Scenario 3's f+1-replica rule) is what makes a single disk loss
+    survivable at all.  Typically scheduled between a ``Crash`` and its
+    ``Restart``; applied to a live replica it wipes and re-syncs in
+    place."""
+
+    addr: Address
+
+
+@dataclass(frozen=True)
 class Heal:
     """Remove every partition, storm and clock skew currently installed."""
 
@@ -444,6 +462,8 @@ class Nemesis:
             self.plane.add_storm(f)
         elif isinstance(f, ClockSkew):
             self.plane.set_skew(f.addr, f.scale, f.offset)
+        elif isinstance(f, DiskLoss):
+            self.transport.nodes[f.addr].lose_disk()
         elif isinstance(f, Heal):
             self.plane.heal()
         elif isinstance(f, ReconfigureRandom):

@@ -145,9 +145,16 @@ class AsyncTransport:
             return
         for delay in delays:
             for extra in extras:
-                self._call_later(
-                    delay + extra, lambda m=msg: self._deliver(src, dst, m)
-                )
+                self._schedule_delivery(src, dst, msg, delay + extra)
+
+    def _schedule_delivery(
+        self, src: Address, dst: Address, msg: Any, delay: float
+    ) -> None:
+        """Hand ``msg`` to the delivery substrate after the modelled
+        network delay.  The in-process transport delivers by direct call;
+        ``tcp.TcpTransport`` overrides this to serialize the message onto
+        a real socket instead."""
+        self._call_later(delay, lambda m=msg: self._deliver(src, dst, m))
 
     def _deliver(self, src: Address, dst: Address, msg: Any) -> None:
         node = self.nodes.get(dst)
@@ -218,6 +225,7 @@ class AsyncTransport:
     ) -> float:
         self._loop = asyncio.get_running_loop()
         self._t0 = self._loop.time()
+        await self._on_loop_start()  # tcp: bind sockets before any send
         pending, self._pending = self._pending, []
         for delay, fn, handle_into in pending:
             self._call_later(delay, fn, handle_into=handle_into)
@@ -228,5 +236,13 @@ class AsyncTransport:
                 break
             await asyncio.sleep(poll)
         elapsed = self._loop.time() - start
+        await self._on_loop_stop()
         self._loop = None
         return elapsed
+
+    async def _on_loop_start(self) -> None:  # pragma: no cover - hook
+        """Subclass hook: runs once the loop exists, before pending
+        effects replay (the TCP transport binds its listeners here)."""
+
+    async def _on_loop_stop(self) -> None:  # pragma: no cover - hook
+        """Subclass hook: runs after the deadline, before the loop dies."""

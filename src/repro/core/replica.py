@@ -69,15 +69,20 @@ class Replica(Node):
         sm_factory: Callable[[], StateMachine] = NoopSM,
         *,
         leader_addrs: Tuple[Address, ...] = (),
+        peers: Tuple[Address, ...] = (),
         batch: Optional[BatchPolicy] = None,
         num_shards: int = 1,
         fill_interval: float = 0.01,
         ack_stride: int = 1,
     ):
         super().__init__(addr, batch=batch)
+        self.sm_factory = sm_factory
         self.sm = sm_factory()
         self.elog = ExecutionLog(num_shards=num_shards)
         self.leader_addrs = leader_addrs
+        # Peer replicas, for the disk-loss re-sync path (RecoverA to the
+        # peers; any one live peer's RecoverB restores the whole prefix).
+        self.peers = tuple(p for p in peers if p != addr)
         # Replication-watermark acks fan out to EVERY shard's proposers;
         # with many shards that is the replica's dominant egress, so acks
         # coalesce to every ``ack_stride`` executed slots (stride 1 = the
@@ -92,9 +97,18 @@ class Replica(Node):
         # noop-fill (Mencius-style skip).  Only armed when sharded.
         self.fill_interval = fill_interval
         self._fill_stuck_at = -1
+        # Disk-loss fault model (nemesis.DiskLoss): set while this
+        # replica's persisted state is gone and a re-sync is owed.
+        self._disk_lost = False
+        # True from the re-sync RecoverA broadcast until the first peer
+        # RecoverB lands; a retry timer re-broadcasts while set, so the
+        # one request is not a single point of loss on a faulty network.
+        self._resync_pending = False
         # telemetry
         self.executions = 0
         self.fill_requests = 0
+        self.disk_losses = 0
+        self.resyncs = 0
 
     def on_start(self) -> None:
         if self.elog.num_shards > 1 and self.leader_addrs:
@@ -102,6 +116,68 @@ class Replica(Node):
 
     def on_restart(self) -> None:
         self.on_start()
+        if self._disk_lost:
+            self._resync()
+        elif self._resync_pending:
+            self._arm_resync_retry()  # crash interrupted a re-sync: resume
+
+    # -- disk-loss fault model ---------------------------------------------
+    def lose_disk(self) -> None:
+        """Wipe this replica's persisted state (nemesis.DiskLoss): the
+        chosen log, the executed-prefix state machine and the at-most-once
+        dedup table all go.  A crashed replica re-syncs on restart; a live
+        one re-syncs immediately.  Replaying the prefix from a peer
+        reproduces identical results (execution is deterministic and
+        slot-ordered), so re-sent client replies stay linearizable."""
+        self.disk_losses += 1
+        self.elog = ExecutionLog(num_shards=self.elog.num_shards)
+        self.sm = self.sm_factory()
+        self.executed.clear()
+        self._last_acked = 0
+        self._fill_stuck_at = -1
+        self._disk_lost = True
+        if not self.failed:
+            self._resync()
+
+    def _resync(self) -> None:
+        """Refill the wiped log from the peer replicas.  New Chosen
+        broadcasts keep landing in parallel; the contiguous-prefix
+        execution rule makes the interleaving safe.  The request retries
+        on a timer until a peer answers — drops, storms and partitions
+        must delay a re-sync, never wedge it."""
+        self._disk_lost = False
+        self.resyncs += 1
+        if not self.peers:
+            return
+        self._resync_pending = True
+        self.broadcast(self.peers, m.RecoverA())
+        self._arm_resync_retry()
+
+    def _arm_resync_retry(self) -> None:
+        def retry() -> None:
+            if self._resync_pending and not self.failed:
+                self.broadcast(self.peers, m.RecoverA())
+                self._arm_resync_retry()
+
+        self.set_timer(self.fill_interval, retry)
+
+    @on(m.RecoverB)
+    def _on_recover_b(self, src: Address, msg: m.RecoverB) -> None:
+        """A peer's chosen prefix (disk-loss re-sync answer)."""
+        self._resync_pending = False
+        progressed = False
+        for slot, value in msg.entries:
+            prev = self.elog.insert(slot, value)
+            if prev is not None:
+                assert _value_eq(prev, value), (
+                    f"SAFETY VIOLATION at replica {self.addr}: re-sync slot "
+                    f"{slot} has both {prev} and {value}"
+                )
+        for _slot, value in self.elog.drain_executable():
+            self._execute(value)
+            progressed = True
+        if progressed and self.exec_watermark - self._last_acked >= self.ack_stride:
+            self._send_acks()
 
     def _fill_tick(self) -> None:
         if self.exec_watermark != self._last_acked:

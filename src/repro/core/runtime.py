@@ -240,7 +240,20 @@ class ProtocolNode:
 
     # -- dispatch ----------------------------------------------------------
     def on_message(self, src: Address, msg: Any) -> None:
-        handler = self._handlers.get(type(msg))
+        # Hot path: one dict probe per message, and Batch envelopes unwrap
+        # in-line (no re-entry through on_message per sub-message) — the
+        # dominant receive shape of the batched Section 8 deployment.
+        handlers = self._handlers
+        t = type(msg)
+        if t is m.Batch:
+            for sub in msg.messages:
+                handler = handlers.get(type(sub))
+                if handler is None:
+                    self.unhandled_count += 1
+                else:
+                    handler(src, sub)
+            return
+        handler = handlers.get(t)
         if handler is None:
             self.unhandled_count += 1
             return
@@ -248,7 +261,9 @@ class ProtocolNode:
 
     @on(m.Batch)
     def _on_batch(self, src: Address, batch: m.Batch) -> None:
-        """Unwrap a batch envelope: handlers see per-message semantics."""
+        """Unwrap a batch envelope: handlers see per-message semantics.
+        (Kept registered for subclasses that dispatch through the table
+        directly; ``on_message`` takes the in-line fast path.)"""
         for sub in batch.messages:
             self.on_message(src, sub)
 

@@ -41,13 +41,13 @@ import random
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from .deploy import ClusterSpec
+from .deploy import ClusterSpec, make_transport
 from .fast_paxos import FastAcceptor, FastClient, FastCoordinator
 from .matchmaker import Matchmaker
-from .net import AsyncTransport
 from .nemesis import (
     ClockSkew,
     Crash,
+    DiskLoss,
     Event,
     Heal,
     MMReconfigure,
@@ -65,7 +65,7 @@ from .oracle import Oracle, SafetyViolation
 from .proposer import Options
 from .quorums import Configuration
 from .replica import KVStoreSM
-from .sim import NetworkConfig, Simulator
+from .sim import NetworkConfig
 
 
 class ScenarioFailure(AssertionError):
@@ -334,6 +334,42 @@ def _shard_leader_failover(seed: int) -> _Scenario:
     )
 
 
+def _replica_disk_loss(seed: int) -> _Scenario:
+    """A replica crashes, its disk is wiped while down, and it restarts
+    with nothing — the crash-recovery assumption (synchronously persisted
+    state survives) broken for one node.  On restart it must re-sync the
+    chosen prefix from its peers before re-acking, while live traffic and
+    a reconfiguration keep running.  GC's f+1-replica durability bar
+    (Section 5, Scenario 3) is exactly what makes one disk loss
+    survivable: the remaining replicas still hold every GC-cleared
+    prefix."""
+    rng = _rng("replica_disk_loss", seed)
+    spec = _base_cluster()
+    victim = rng.choice(list(spec.replica_addrs()))
+    live_wipe = rng.random() < 0.3  # sometimes wipe a *running* replica
+    events = [Event(0.02, StartClients())]
+    if live_wipe:
+        events.append(Event(_jitter(rng, 0.12), DiskLoss(victim)))
+    else:
+        events += [
+            Event(_jitter(rng, 0.1), Crash(victim, clean=False)),
+            Event(_jitter(rng, 0.16), DiskLoss(victim)),
+            Event(_jitter(rng, 0.22), Restart(victim)),
+        ]
+    events += [
+        Event(_jitter(rng, 0.3), ReconfigureRandom()),
+        Event(0.45, StopClients()),
+    ]
+    return _Scenario(
+        cluster=spec,
+        schedule=Schedule("replica_disk_loss", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.6,
+        steady_window=(0.02, 0.1),
+        faulty_window=(0.1, 0.4),
+    )
+
+
 def _clock_skew_churn(seed: int) -> _Scenario:
     """Timer-drift adversary: the leader's clock runs slow (heartbeats,
     Phase-2 retries and flush timers all late) and one acceptor's runs
@@ -372,6 +408,7 @@ _BUILDERS: Dict[str, Callable[[int], _Scenario]] = {
     "acceptor_swap_storm": _acceptor_swap_storm,
     "gc_during_failover": _gc_during_failover,
     "shard_leader_failover": _shard_leader_failover,
+    "replica_disk_loss": _replica_disk_loss,
     "clock_skew_churn": _clock_skew_churn,
 }
 
@@ -397,8 +434,9 @@ def run_scenario(
 ) -> ScenarioResult:
     """Run one adversarial scenario; returns the (unraised) result.
 
-    ``transport`` is ``"sim"`` (deterministic, byte-for-byte replayable)
-    or ``"async"`` (wall-clock asyncio; safety checks only).
+    ``transport`` is ``"sim"`` (deterministic, byte-for-byte replayable),
+    ``"async"`` (wall-clock asyncio; safety checks only), or ``"tcp"``
+    (real per-node sockets + binary wire frames; safety checks only).
     ``schedule`` overrides the builder's schedule (same cluster/topology)
     — the shrinker re-runs a scenario with event subsequences this way.
     """
@@ -414,12 +452,7 @@ def run_scenario(
             steady_window=sc.steady_window,
             faulty_window=sc.faulty_window,
         )
-    if transport == "sim":
-        t: Any = Simulator(seed=seed, net=sc.net)
-    elif transport == "async":
-        t = AsyncTransport(seed=seed, net=sc.net)
-    else:
-        raise ValueError(f"unknown transport {transport!r}")
+    t: Any = make_transport(transport, seed=seed, net=sc.net)
     dep = sc.cluster.instantiate(t)
     for i, c in enumerate(dep.clients):
         c.op_factory = _kv_op_factory(i)
@@ -492,12 +525,7 @@ def _run_fast_paxos(seed: int, transport: str) -> ScenarioResult:
     rng = _rng("fast_paxos_recovery", seed)
     schedule = _fast_paxos_schedule(seed)
     net = NetworkConfig()
-    if transport == "sim":
-        t: Any = Simulator(seed=seed, net=net)
-    elif transport == "async":
-        t = AsyncTransport(seed=seed, net=net)
-    else:
-        raise ValueError(f"unknown transport {transport!r}")
+    t: Any = make_transport(transport, seed=seed, net=net)
 
     oracle = Oracle()
     mms = [Matchmaker(f"mm{i}") for i in range(3)]
@@ -622,21 +650,123 @@ def shrink_schedule(
     return mk(events)
 
 
+def shrink_timing(
+    schedule: Schedule,
+    still_fails: Callable[[Schedule], bool],
+    *,
+    max_probes: int = 200,
+    min_gap: float = 1e-4,
+    precision: float = 1e-3,
+) -> Schedule:
+    """Shrink a failing schedule's *timing*: pull the surviving events as
+    close together as the failure allows, exposing the tightest race.
+
+    Runs after (or independently of) the event-subsequence ddmin
+    (:func:`shrink_schedule`): the event list is held fixed and only the
+    timestamps move.  Two phases, both probe-budgeted:
+
+      1. **Global gap compression** — repeatedly try scaling every
+         inter-event gap toward ``min_gap`` (halving the scale while the
+         failure reproduces).  One probe per scale step collapses most of
+         the slack at once.
+      2. **Per-event left-pull** — walk the events in order and
+         binary-search each event's earliest failing time in
+         ``[prev + min_gap, current]`` down to ``precision`` of the gap.
+
+    Chronological order is preserved by construction (an event never
+    moves before its predecessor plus ``min_gap``).  The result is the
+    last candidate for which ``still_fails`` returned True — always a
+    reproducing schedule, never a guess.
+    """
+    events: List[Event] = list(schedule.events)
+    if not events:
+        return schedule
+
+    def mk(times: List[float]) -> Schedule:
+        return Schedule(
+            schedule.name,
+            schedule.seed,
+            tuple(Event(t, e.fault) for t, e in zip(times, events)),
+        )
+
+    probes = 0
+
+    def probe(times: List[float]) -> bool:
+        nonlocal probes
+        probes += 1
+        return still_fails(mk(times))
+
+    times = [e.at for e in events]
+
+    def compressed(scale: float) -> List[float]:
+        out = [times[0]]
+        for i in range(1, len(times)):
+            gap = max(min_gap, (times[i] - times[i - 1]) * scale)
+            out.append(out[-1] + gap)
+        return out
+
+    # Phase 1: global gap compression (halve the scale while it fails).
+    scale = 0.5
+    while probes < max_probes and len(times) > 1:
+        cand = compressed(scale)
+        if cand == times:
+            break
+        if probe(cand):
+            times = cand
+            # keep halving from the *new* baseline
+        else:
+            break
+        scale *= 0.5
+
+    # Phase 2: per-event left-pull (binary search each event's floor).
+    for i in range(len(times)):
+        if probes >= max_probes:
+            break
+        floor = 0.0 if i == 0 else times[i - 1] + min_gap
+        lo, hi = floor, times[i]
+        if hi - lo <= precision * max(hi, 1.0):
+            continue
+        # Can it sit at the floor outright?
+        cand = times[:i] + [lo] + times[i + 1 :]
+        if probe(cand):
+            times = cand
+            continue
+        # Earliest failing time is in (lo, hi]; bisect down to precision.
+        while hi - lo > precision * max(hi, 1.0) and probes < max_probes:
+            mid = (lo + hi) / 2.0
+            cand = times[:i] + [mid] + times[i + 1 :]
+            if probe(cand):
+                hi = mid
+                times = cand
+            else:
+                lo = mid
+    return mk(times)
+
+
 def shrink_failing_scenario(
-    name: str, seed: int, *, transport: str = "sim", max_probes: int = 60
+    name: str,
+    seed: int,
+    *,
+    transport: str = "sim",
+    max_probes: int = 60,
+    shrink_times: bool = False,
 ) -> Schedule:
     """Shrink a real failing (name, seed) run to a minimal schedule.
 
     Convenience wrapper: the predicate re-runs the scenario with each
     candidate subsequence on the deterministic simulator and asks whether
-    any invariant still breaks."""
+    any invariant still breaks.  ``shrink_times=True`` additionally runs
+    the timing shrinker on the surviving events (tightest failing race)."""
 
     def still_fails(s: Schedule) -> bool:
         return not run_scenario(name, seed, transport=transport, schedule=s).safe
 
-    return shrink_schedule(
+    shrunk = shrink_schedule(
         build_schedule(name, seed), still_fails, max_probes=max_probes
     )
+    if shrink_times:
+        shrunk = shrink_timing(shrunk, still_fails, max_probes=max_probes)
+    return shrunk
 
 
 # --------------------------------------------------------------------------

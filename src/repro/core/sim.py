@@ -9,6 +9,23 @@ messages).
 Everything is driven by a single seeded RNG so that every run — including
 the hypothesis property tests and the paper-figure benchmarks — is exactly
 reproducible.
+
+Hot path (the wire-plane overhaul): heap entries are closure-free
+``__slots__`` event records (``_Frame`` / ``_Delivery`` / ``_TimerFire`` /
+``_Call``) interpreted by a single polymorphic ``run(sim)`` — no lambda
+allocation per delivery — and effect interpretation goes through a
+per-class dispatch table instead of an isinstance chain.  Neither changes
+event ordering: heap keys are the same ``(when, seq)`` pairs and the RNG
+draw order is untouched, so legacy seeds replay byte-for-byte.
+
+Egress frame coalescing (``NetworkConfig.egress_coalescing``) models what
+a real socket transport does under backpressure: while a previous wire
+frame to the same destination is still being serialized (the sender's
+egress queue is busy), further messages to that destination ride the same
+frame for a marginal encode cost instead of paying the full per-frame
+overhead — a ``writev``/Nagle effect, and exactly how ``core/tcp.py``
+behaves over real sockets.  Off by default: legacy seeds and all
+``num_shards=1`` runs are byte-for-byte unchanged.
 """
 
 from __future__ import annotations
@@ -45,6 +62,20 @@ class NetworkConfig:
     what makes hot-path batching pay, exactly as in the paper's batched
     Section 8 deployment.  Disabled (0.0) by default so legacy seeds
     reproduce byte-for-byte.
+
+    ``egress_coalescing`` extends that model with wire-plane frame
+    coalescing: messages sent to a destination whose previous frame is
+    still in the sender's serialization queue join that frame, paying
+    only ``coalesce_cost`` (marginal sub-message encode; defaults to an
+    eighth of the per-frame overhead, the measured shape of the binary
+    codec in BENCH_wire.json) instead of a full ``per_msg_overhead``.
+    At most ``coalesce_max`` messages share one frame.  Messages touched
+    by fault injection or drop/dup randomness always take the one-frame-
+    per-message path, so every adversarial draw stays per-message.
+    **Simulator-only**: the asyncio transport ignores the flag (its
+    wall-clock scheduling can't model a serialization queue), and the
+    TCP transport gets the same effect physically, from the kernel's
+    socket buffering — do not compare sim-vs-async numbers with it set.
     """
 
     base_latency: float = 55e-6
@@ -56,6 +87,10 @@ class NetworkConfig:
     extra_delay: Optional[Callable[[Address, Address, Any], float]] = None
     # Optional hook: (src, dst, msg) -> True to force-drop.
     drop_filter: Optional[Callable[[Address, Address, Any], bool]] = None
+    # Wire-plane frame coalescing (off by default: legacy byte-for-byte).
+    egress_coalescing: bool = False
+    coalesce_max: int = 16
+    coalesce_cost: Optional[float] = None  # default: per_msg_overhead / 8
 
 
 def plan_delivery(
@@ -113,31 +148,135 @@ class Timer:
         self.cancelled = True
 
 
+# --------------------------------------------------------------------------
+# Heap event records: closure-free, __slots__, one polymorphic run(sim).
+# Heap keys stay (when, seq) so ordering is identical to the historical
+# lambda-based heap — the records only replace the allocation-heavy
+# closures, not the schedule.
+# --------------------------------------------------------------------------
+class _Delivery:
+    """One message arriving at ``dst``."""
+
+    __slots__ = ("src", "dst", "msg")
+
+    def __init__(self, src: Address, dst: Address, msg: Any):
+        self.src = src
+        self.dst = dst
+        self.msg = msg
+
+    def run(self, sim: "Simulator") -> None:
+        node = sim.nodes.get(self.dst)
+        if node is None or node.failed:
+            sim.messages_dropped += 1
+            return
+        sim.messages_delivered += 1
+        node.on_message(self.src, self.msg)
+
+
+class _Frame:
+    """A coalesced wire frame: several messages from ``src`` to ``dst``
+    that shared one serialization slot, delivered back-to-back."""
+
+    __slots__ = ("src", "dst", "depart", "msgs")
+
+    def __init__(self, src: Address, dst: Address, depart: float, msg: Any):
+        self.src = src
+        self.dst = dst
+        self.depart = depart  # frames accept riders until this instant
+        self.msgs: List[Any] = [msg]
+
+    def run(self, sim: "Simulator") -> None:
+        node = sim.nodes.get(self.dst)
+        if node is None:
+            sim.messages_dropped += len(self.msgs)
+            return
+        src = self.src
+        for msg in self.msgs:
+            if node.failed:
+                sim.messages_dropped += 1
+            else:
+                sim.messages_delivered += 1
+                node.on_message(src, msg)
+
+
+class _TimerFire:
+    """A node-owned timer firing (suppressed on cancel/crash/past life)."""
+
+    __slots__ = ("timer", "node", "epoch", "fn")
+
+    def __init__(self, timer: Timer, node: Node, epoch: int, fn: Callable[[], None]):
+        self.timer = timer
+        self.node = node
+        self.epoch = epoch
+        self.fn = fn
+
+    def run(self, sim: "Simulator") -> None:
+        # Suppress cancelled timers, timers of a currently-crashed node,
+        # and timers armed in a previous life (crash() bumps life_epoch,
+        # so a restarted node never resurrects pre-crash timer chains
+        # next to the ones on_restart re-arms).
+        t = self.timer
+        node = self.node
+        if t.cancelled or node.failed or node.life_epoch != self.epoch:
+            return
+        t.fired = True
+        self.fn()
+
+
+class _Call:
+    """A global (oracle / scenario-script) callback."""
+
+    __slots__ = ("fn",)
+
+    def __init__(self, fn: Callable[[], None]):
+        self.fn = fn
+
+    def run(self, sim: "Simulator") -> None:
+        self.fn()
+
+
 class Simulator:
     """Priority-queue discrete-event simulator.
 
     Implements the runtime ``Transport`` protocol: protocol nodes emit
     ``Send`` / ``Broadcast`` / ``SetTimer`` / ``CancelTimer`` effects and
-    the simulator interprets them against its event heap.
+    the simulator interprets them against its event heap through a
+    per-effect-class dispatch table.
     """
 
     def __init__(self, seed: int = 0, net: Optional[NetworkConfig] = None):
         self.rng = random.Random(seed)
         self.net = net or NetworkConfig()
         self.now = 0.0
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._heap: List[Tuple[float, int, Any]] = []
         self._seq = itertools.count()
         self.nodes: Dict[Address, Node] = {}
         self._partitions: List[Tuple[Set[Address], Set[Address]]] = []
         self._egress_ready: Dict[Address, float] = {}
+        # Wire-plane frame coalescing state: the open (still-serializing)
+        # frame per (src, dst) pair, joinable until its depart instant.
+        self._open_frames: Dict[Tuple[Address, Address], _Frame] = {}
+        self._coalesce_cost = (
+            self.net.coalesce_cost
+            if self.net.coalesce_cost is not None
+            else self.net.per_msg_overhead / 8.0
+        )
         # Optional nemesis interposition point (nemesis.FaultPlane): every
         # send is routed through it for partition / drop / dup / delay
         # faults that can be installed and healed mid-run.
         self.faults: Optional[Any] = None
+        # Per-effect-class dispatch (kills the isinstance chain).
+        self._perform: Dict[type, Callable[[Address, Any], Optional[Timer]]] = {
+            Send: self._perform_send,
+            Broadcast: self._perform_broadcast,
+            SetTimer: self._perform_set_timer,
+            CancelTimer: self._perform_cancel_timer,
+        }
         # telemetry
         self.messages_sent = 0
         self.messages_delivered = 0
         self.messages_dropped = 0
+        self.frames_coalesced = 0
 
     # -- topology ----------------------------------------------------------
     def register(self, node: Node) -> Node:
@@ -149,19 +288,26 @@ class Simulator:
 
     # -- effect interpretation (runtime.Transport) --------------------------
     def perform(self, src: Address, effect: Any) -> Optional[Timer]:
-        if isinstance(effect, Send):
-            self.send(src, effect.dst, effect.msg)
-        elif isinstance(effect, Broadcast):
-            for d in effect.dsts:
-                self.send(src, d, effect.msg)
-        elif isinstance(effect, SetTimer):
-            return self.set_timer(self.nodes[src], effect.delay, effect.callback)
-        elif isinstance(effect, CancelTimer):
-            if effect.handle is not None:
-                effect.handle.cancel()
-        else:
-            raise TypeError(f"unknown effect {effect!r}")
-        return None
+        try:
+            handler = self._perform[type(effect)]
+        except KeyError:
+            raise TypeError(f"unknown effect {effect!r}") from None
+        return handler(src, effect)
+
+    def _perform_send(self, src: Address, effect: Send) -> None:
+        self.send(src, effect.dst, effect.msg)
+
+    def _perform_broadcast(self, src: Address, effect: Broadcast) -> None:
+        msg = effect.msg
+        for d in effect.dsts:
+            self.send(src, d, msg)
+
+    def _perform_set_timer(self, src: Address, effect: SetTimer) -> Timer:
+        return self.set_timer(self.nodes[src], effect.delay, effect.callback)
+
+    def _perform_cancel_timer(self, src: Address, effect: CancelTimer) -> None:
+        if effect.handle is not None:
+            effect.handle.cancel()
 
     def partition(self, side_a: Set[Address], side_b: Set[Address]) -> None:
         """Drop all messages between ``side_a`` and ``side_b`` until healed."""
@@ -177,8 +323,8 @@ class Simulator:
         return False
 
     # -- event queue -------------------------------------------------------
-    def _push(self, when: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (when, next(self._seq), fn))
+    def _push(self, when: float, record: Any) -> None:
+        heapq.heappush(self._heap, (when, next(self._seq), record))
 
     def set_timer(self, node: Node, delay: float, fn: Callable[[], None]) -> Timer:
         if self.faults is not None:
@@ -186,24 +332,12 @@ class Simulator:
             # while the network clock stays truthful.
             delay = self.faults.on_timer(node.addr, delay)
         t = Timer(self.now + delay)
-        armed_epoch = node.life_epoch
-
-        def fire() -> None:
-            # Suppress cancelled timers, timers of a currently-crashed
-            # node, and timers armed in a previous life (crash() bumps
-            # life_epoch, so a restarted node never resurrects pre-crash
-            # timer chains next to the ones on_restart re-arms).
-            if t.cancelled or node.failed or node.life_epoch != armed_epoch:
-                return
-            t.fired = True
-            fn()
-
-        self._push(self.now + delay, fire)
+        self._push(self.now + delay, _TimerFire(t, node, node.life_epoch, fn))
         return t
 
     def call_at(self, when: float, fn: Callable[[], None]) -> None:
         """Schedule a global (oracle / scenario-script) callback."""
-        self._push(when, fn)
+        self._push(when, _Call(fn))
 
     # -- message transport ---------------------------------------------------
     def send(self, src: Address, dst: Address, msg: Any) -> None:
@@ -214,24 +348,64 @@ class Simulator:
         if self._partitioned(src, dst):
             self.messages_dropped += 1
             return
-        extras = [0.0]
+        disturbed = False
+        extras = _NO_EXTRAS
         if self.faults is not None:
             extras = self.faults.on_send(src, dst, msg, self.now, self.rng)
             if extras is None:
                 self.messages_dropped += 1
                 return
+            disturbed = extras != [0.0]
+        cfg = self.net
+        if (
+            cfg.egress_coalescing
+            and cfg.per_msg_overhead
+            and not disturbed
+            and not cfg.drop_prob
+            and not cfg.dup_prob
+            and cfg.drop_filter is None
+        ):
+            self._send_coalesced(src, dst, msg)
+            return
         delays = plan_delivery(
-            self.net, self.rng, src, dst, msg, self.now, self._egress_ready
+            cfg, self.rng, src, dst, msg, self.now, self._egress_ready
         )
         if delays is None:
             self.messages_dropped += 1
             return
+        now = self.now
         for delay in delays:
             for extra in extras:
-                self._push(
-                    self.now + delay + extra,
-                    lambda m=msg: self._deliver(src, dst, m),
-                )
+                self._push(now + delay + extra, _Delivery(src, dst, msg))
+
+    def _send_coalesced(self, src: Address, dst: Address, msg: Any) -> None:
+        """Wire-plane egress: join the open frame to ``dst`` if the sender
+        is still serializing it (backpressure), else start a new frame.
+        The join costs only the marginal sub-message encode time — the
+        same ``writev`` effect the TCP transport gets from the kernel."""
+        cfg = self.net
+        key = (src, dst)
+        fr = self._open_frames.get(key)
+        if fr is not None and fr.depart > self.now and len(fr.msgs) < cfg.coalesce_max:
+            fr.msgs.append(msg)
+            self.frames_coalesced += 1
+            # Marginal serialization time still occupies the egress queue.
+            self._egress_ready[src] = (
+                self._egress_ready.get(src, 0.0) + self._coalesce_cost
+            )
+            return
+        departs = (
+            max(self.now, self._egress_ready.get(src, 0.0)) + cfg.per_msg_overhead
+        )
+        self._egress_ready[src] = departs
+        delay = cfg.base_latency
+        if cfg.jitter:
+            delay += self.rng.expovariate(1.0 / cfg.jitter)
+        if cfg.extra_delay is not None:
+            delay += cfg.extra_delay(src, dst, msg)
+        fr = _Frame(src, dst, departs, msg)
+        self._open_frames[key] = fr
+        self._push(departs + delay, fr)
 
     def _deliver(self, src: Address, dst: Address, msg: Any) -> None:
         node = self.nodes.get(dst)
@@ -258,15 +432,17 @@ class Simulator:
     def step(self) -> bool:
         if not self._heap:
             return False
-        when, _, fn = heapq.heappop(self._heap)
+        when, _, record = heapq.heappop(self._heap)
         assert when >= self.now - 1e-12, "time went backwards"
-        self.now = max(self.now, when)
-        fn()
+        if when > self.now:
+            self.now = when
+        record.run(self)
         return True
 
     def run_until(self, t: float, max_events: int = 50_000_000) -> None:
+        heap = self._heap
         events = 0
-        while self._heap and self._heap[0][0] <= t:
+        while heap and heap[0][0] <= t:
             self.step()
             events += 1
             if events > max_events:
@@ -283,3 +459,8 @@ class Simulator:
             events += 1
             if events > max_events:
                 raise RuntimeError("event budget exhausted — livelock?")
+
+
+# FaultPlane.on_send returns a fresh [0.0] for undisturbed sends; this
+# module-level constant is only the no-faults default in Simulator.send.
+_NO_EXTRAS = [0.0]

@@ -1,0 +1,211 @@
+"""Layer 0 — a real TCP transport: socket per node, binary frames.
+
+The long-standing ROADMAP transport follow-on: the *same unmodified* role
+classes run over real kernel sockets.  Every node registered on a
+:class:`TcpTransport` gets its own listening socket on loopback; a send
+is (1) routed through the identical sender-side network model as the
+simulator (``sim.plan_delivery``: seeded drop/dup/jitter draws and the
+``FaultPlane`` nemesis interposition — partitions, storms, clock skew all
+work unchanged), then (2) serialized with the wire-plane binary codec
+(``core/wire.py``) and written to the destination's socket as a
+length-prefixed frame.  The receiving node's reader task decodes frames
+and dispatches them through the normal kernel path.
+
+Connections are opened lazily, one per ordered ``(src, dst)`` pair, and
+announce the sender with a hello frame (the src address) so the receiver
+can attribute messages.  Frames queued while a connection is still being
+established are flushed in order once it is up — per-pair FIFO, exactly
+the guarantee TCP itself gives.  Reordering across pairs (and across
+messages of one pair, via the modelled jitter applied *before* the
+write) is therefore as adversarial as the asyncio transport.
+
+Crash-stop faults keep their transport-level meaning: a crashed node's
+frames are suppressed at the sender and dropped at the receiver; the
+sockets stay up, exactly like a wedged-but-connected process.
+
+This transport inherits the asyncio runtime machinery of
+``net.AsyncTransport`` (timers, pending-effect replay, ``call_at``,
+``run``) and overrides only the delivery substrate — the point of the
+transport boundary is that this file is *all* it takes to move from an
+in-process event loop to real sockets.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import struct
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from . import wire
+from .net import AsyncTransport
+from .runtime import ProtocolNode
+from .sim import Address, NetworkConfig
+
+_U32 = struct.Struct("<I")
+_MAX_FRAME = 64 * 1024 * 1024  # sanity bound; a frame this big is a bug
+
+
+class TcpTransport(AsyncTransport):
+    """Runtime transport over per-node TCP sockets (loopback).
+
+    Usage mirrors ``AsyncTransport``::
+
+        t = TcpTransport(seed=0)
+        dep = ClusterSpec(...).instantiate(t)
+        t.run(duration=2.0, until=lambda: all(c.done for c in dep.clients))
+
+    Nodes registered after ``run()`` has started get their listener bound
+    on the fly; frames addressed to a node whose listener is not up yet
+    queue and flush in order.
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        net: Optional[NetworkConfig] = None,
+        *,
+        host: str = "127.0.0.1",
+    ):
+        super().__init__(seed=seed, net=net)
+        self.host = host
+        self._servers: Dict[Address, asyncio.AbstractServer] = {}
+        self._ports: Dict[Address, int] = {}
+        # One outgoing connection per ordered (src, dst) pair; frames
+        # buffered per pair until the connection (and dst listener) is up.
+        self._writers: Dict[Tuple[Address, Address], asyncio.StreamWriter] = {}
+        self._outbox: Dict[Tuple[Address, Address], Deque[bytes]] = {}
+        self._connecting: Dict[Tuple[Address, Address], bool] = {}
+        self._reader_tasks: List[asyncio.Task] = []
+        # telemetry
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self.frames_sent = 0
+        self.frames_received = 0
+
+    # -- topology ----------------------------------------------------------
+    def register(self, node: ProtocolNode) -> ProtocolNode:
+        node = super().register(node)
+        if self._loop is not None:  # late registration while running
+            self._loop.create_task(self._bind(node.addr))
+        return node
+
+    # -- lifecycle ---------------------------------------------------------
+    async def _on_loop_start(self) -> None:
+        for addr in list(self.nodes):
+            await self._bind(addr)
+
+    async def _on_loop_stop(self) -> None:
+        for task in self._reader_tasks:
+            task.cancel()
+        for writer in self._writers.values():
+            try:
+                writer.close()
+            except Exception:
+                pass
+        for server in self._servers.values():
+            server.close()
+        self._writers.clear()
+        self._connecting.clear()
+        self._servers.clear()
+        self._ports.clear()
+
+    async def _bind(self, addr: Address) -> None:
+        if addr in self._servers:
+            return
+
+        async def handle(reader: asyncio.StreamReader, writer: asyncio.StreamWriter):
+            task = asyncio.current_task()
+            if task is not None:
+                self._reader_tasks.append(task)
+            try:
+                src = await self._read_hello(reader)
+                while True:
+                    payload = await self._read_frame(reader)
+                    if payload is None:
+                        return
+                    self.frames_received += 1
+                    self.bytes_received += 4 + len(payload)
+                    self._deliver(src, addr, wire.decode(payload))
+            except (
+                asyncio.CancelledError,
+                asyncio.IncompleteReadError,
+                ConnectionError,
+            ):
+                return
+            finally:
+                try:
+                    writer.close()
+                except Exception:
+                    pass
+
+        server = await asyncio.start_server(handle, host=self.host, port=0)
+        self._servers[addr] = server
+        self._ports[addr] = server.sockets[0].getsockname()[1]
+        # A listener coming up may unblock queued frames to this addr.
+        for (src, dst) in list(self._outbox):
+            if dst == addr:
+                self._pump(src, dst)
+
+    @staticmethod
+    async def _read_hello(reader: asyncio.StreamReader) -> Address:
+        (n,) = _U32.unpack(await reader.readexactly(4))
+        return (await reader.readexactly(n)).decode("utf-8")
+
+    @staticmethod
+    async def _read_frame(reader: asyncio.StreamReader) -> Optional[bytes]:
+        try:
+            (n,) = _U32.unpack(await reader.readexactly(4))
+        except asyncio.IncompleteReadError:
+            return None  # clean EOF between frames
+        if n > _MAX_FRAME:
+            raise ValueError(f"oversized frame ({n} bytes)")
+        return await reader.readexactly(n)
+
+    # -- the delivery substrate (overrides net.AsyncTransport) -------------
+    def _schedule_delivery(
+        self, src: Address, dst: Address, msg: Any, delay: float
+    ) -> None:
+        # The network model (drops, dup, jitter, faults) already ran in
+        # _send; after the modelled delay the frame goes onto the socket.
+        self._call_later(delay, lambda m=msg: self._transmit(src, dst, m))
+
+    def _transmit(self, src: Address, dst: Address, msg: Any) -> None:
+        key = (src, dst)
+        # wire.frame owns the frame format (length prefix included);
+        # _read_frame is its read-side mirror.
+        self._outbox.setdefault(key, deque()).append(wire.frame(msg))
+        self._pump(src, dst)
+
+    def _pump(self, src: Address, dst: Address) -> None:
+        key = (src, dst)
+        writer = self._writers.get(key)
+        if writer is not None:
+            box = self._outbox.get(key)
+            while box:
+                data = box.popleft()
+                self.frames_sent += 1
+                self.bytes_sent += len(data)
+                writer.write(data)
+            return
+        if self._connecting.get(key) or self._loop is None:
+            return
+        if dst not in self._ports:
+            return  # listener not up yet; _bind() re-pumps
+        self._connecting[key] = True
+        self._loop.create_task(self._connect(key))
+
+    async def _connect(self, key: Tuple[Address, Address]) -> None:
+        src, dst = key
+        try:
+            reader, writer = await asyncio.open_connection(
+                self.host, self._ports[dst]
+            )
+        except OSError:
+            self._connecting[key] = False
+            return  # next transmit retries
+        hello = src.encode("utf-8")
+        writer.write(_U32.pack(len(hello)) + hello)
+        self._writers[key] = writer
+        self._connecting[key] = False
+        self._pump(src, dst)

@@ -334,3 +334,113 @@ def test_skewed_leader_behaves_differently_but_safely():
     base = run(False)
     skewed = run(True)
     assert skewed != base  # timer drift visibly perturbs the run
+
+
+# --------------------------------------------------------------------------
+# Disk loss (the crash-recovery assumption, broken for one replica)
+# --------------------------------------------------------------------------
+def test_disk_loss_wipes_and_resyncs_live_replica():
+    """Wiping a *running* replica's disk drops its log and state machine;
+    the immediate peer re-sync restores the full prefix and re-executed
+    results match (deterministic slot-order replay)."""
+    d = build(f=1, n_clients=1, seed=3)
+    d.start_clients()
+    d.sim.run_for(0.1)
+    victim = d.replicas[0]
+    assert victim.exec_watermark > 10
+    victim.lose_disk()
+    assert victim.exec_watermark == 0 and not victim.log  # really wiped
+    assert victim.disk_losses == 1 and victim.resyncs == 1
+    d.sim.run_for(0.1)
+    d.stop_clients()
+    d.sim.run_for(0.05)
+    peer = d.replicas[1]
+    assert victim.exec_watermark >= peer.exec_watermark - 1
+    assert check_invariants(d) == []
+
+
+def test_disk_loss_on_crashed_replica_resyncs_on_restart():
+    """The scheduled shape: crash -> disk wipe while down -> restart.
+    The replica must come back empty, re-sync from its peers, and catch
+    up to the live execution frontier without any invariant violation."""
+    from repro.core import DiskLoss
+
+    d = build(f=1, n_clients=2, seed=4)
+    sched = Schedule(
+        "disk-loss-unit",
+        4,
+        (
+            Event(0.05, Crash("r0", clean=False)),
+            Event(0.1, DiskLoss("r0")),
+            Event(0.15, Restart("r0")),
+        ),
+    )
+    nem = d.attach_nemesis(sched, check=check_invariants)
+    d.start_clients()
+    d.sim.run_for(0.4)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    assert nem.final_check() == []
+    r0 = d.replicas[0]
+    assert r0.disk_losses == 1 and r0.resyncs == 1
+    # caught back up with the survivors
+    peers_w = max(r.exec_watermark for r in d.replicas[1:])
+    assert r0.exec_watermark >= peers_w - 1
+    # replay token printable (DiskLoss reprs round through the schedule)
+    assert "DiskLoss" in nem.replay_line()
+
+
+def test_disk_loss_scenario_seeded_replay():
+    from repro.core import run_scenario
+
+    a = run_scenario("replica_disk_loss", 3, transport="sim")
+    b = run_scenario("replica_disk_loss", 3, transport="sim")
+    a.raise_if_unsafe(), b.raise_if_unsafe()
+    assert "\n".join(a.event_log) == "\n".join(b.event_log)
+    assert (a.chosen_slots, a.completed_commands) == (
+        b.chosen_slots,
+        b.completed_commands,
+    )
+    # at least one seed in the family wipes a live replica, and at least
+    # one goes through the crash->wipe->restart shape
+    from repro.core import DiskLoss as DL
+
+    shapes = set()
+    for seed in range(10):
+        evs = build_schedule("replica_disk_loss", seed).events
+        has_crash = any(isinstance(e.fault, Crash) for e in evs)
+        assert any(isinstance(e.fault, DL) for e in evs)
+        shapes.add(has_crash)
+    assert shapes == {True, False}
+
+
+def test_disk_loss_resync_retries_through_message_loss():
+    """The re-sync request must survive a network that eats it: with the
+    FaultPlane dropping everything around the victim for a while, the
+    retry timer keeps re-asking until a peer answers."""
+    from repro.core import DiskLoss, Partition
+
+    d = build(f=1, n_clients=1, seed=6)
+    sched = Schedule(
+        "disk-loss-lossy",
+        6,
+        (
+            Event(0.05, Crash("r0", clean=False)),
+            Event(0.08, DiskLoss("r0")),
+            # r0 comes back inside a partition: its RecoverA broadcasts
+            # are all dropped until the heal.
+            Event(0.1, Partition(("r0",), ("r1", "r2", "p0", "p1"))),
+            Event(0.12, Restart("r0")),
+            Event(0.3, Heal()),
+        ),
+    )
+    nem = d.attach_nemesis(sched, check=check_invariants)
+    d.start_clients()
+    d.sim.run_for(0.5)
+    d.stop_clients()
+    d.sim.run_for(0.1)
+    assert nem.final_check() == []
+    r0 = d.replicas[0]
+    assert not r0._resync_pending  # a peer answered after the heal
+    peers_w = max(r.exec_watermark for r in d.replicas[1:])
+    assert r0.exec_watermark >= peers_w - 1, (r0.exec_watermark, peers_w)

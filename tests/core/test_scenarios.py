@@ -216,6 +216,119 @@ def test_shrinker_respects_probe_budget():
     assert len(calls) <= 26
 
 
+# --------------------------------------------------------------------------
+# Timing shrinking (pull surviving events together: tightest failing race)
+# --------------------------------------------------------------------------
+def test_timing_shrinker_compresses_when_timing_is_irrelevant():
+    """A failure that only depends on the event *set* compresses to the
+    minimum gap: every event pulled up against its predecessor."""
+    from repro.core.nemesis import Crash, Event, Restart, Schedule
+    from repro.core.scenarios import shrink_timing
+
+    sched = Schedule(
+        "loose",
+        0,
+        (
+            Event(0.10, Crash("p0")),
+            Event(0.40, Restart("p0")),
+            Event(0.90, Crash("p1")),
+        ),
+    )
+
+    def still_fails(s):
+        kinds = [type(e.fault).__name__ for e in s.events]
+        return kinds == ["Crash", "Restart", "Crash"]
+
+    shrunk = shrink_timing(sched, still_fails, min_gap=1e-3)
+    ats = [e.at for e in shrunk.events]
+    # chronology preserved, gaps collapsed to ~min_gap, pulled left to 0
+    assert ats[0] == pytest.approx(0.0, abs=1e-6)
+    assert ats[1] - ats[0] == pytest.approx(1e-3, rel=0.5)
+    assert ats[2] - ats[1] == pytest.approx(1e-3, rel=0.5)
+    # faults untouched
+    assert [type(e.fault).__name__ for e in shrunk.events] == [
+        "Crash",
+        "Restart",
+        "Crash",
+    ]
+
+
+def test_timing_shrinker_respects_a_required_gap():
+    """A race that needs >= 100ms between crash and restart must keep
+    (about) that gap — the shrinker converges to the boundary instead of
+    breaking the failure."""
+    from repro.core.nemesis import Crash, Event, Restart, Schedule
+    from repro.core.scenarios import shrink_timing
+
+    sched = Schedule(
+        "gapped", 0, (Event(0.2, Crash("p0")), Event(0.9, Restart("p0")))
+    )
+
+    def still_fails(s):
+        return s.events[1].at - s.events[0].at >= 0.1
+
+    shrunk = shrink_timing(sched, still_fails, min_gap=1e-4)
+    gap = shrunk.events[1].at - shrunk.events[0].at
+    assert 0.1 <= gap <= 0.12, gap  # at the boundary, within precision
+    assert still_fails(shrunk)  # the result always reproduces
+
+
+def test_timing_shrinker_result_always_fails():
+    """Whatever the predicate shape, the returned schedule reproduces."""
+    import random as _random
+
+    from repro.core.nemesis import Event, Heal, Schedule
+    from repro.core.scenarios import shrink_timing
+
+    rng = _random.Random(7)
+    sched = Schedule(
+        "arbitrary",
+        0,
+        tuple(Event(0.05 + 0.1 * i + rng.random() * 0.03, Heal()) for i in range(6)),
+    )
+
+    def still_fails(s):
+        # fails iff total span exceeds 150ms — partially compressible
+        return s.events[-1].at - s.events[0].at >= 0.15
+
+    shrunk = shrink_timing(sched, still_fails)
+    assert still_fails(shrunk)
+    span0 = sched.events[-1].at - sched.events[0].at
+    span1 = shrunk.events[-1].at - shrunk.events[0].at
+    assert span1 < span0  # it did tighten
+
+
+def test_timing_shrinker_probe_budget_and_order():
+    from repro.core.nemesis import Event, Heal, Schedule
+    from repro.core.scenarios import shrink_timing
+
+    sched = Schedule(
+        "budget", 0, tuple(Event(0.1 * (i + 1), Heal()) for i in range(10))
+    )
+    calls = []
+
+    def still_fails(s):
+        calls.append(1)
+        ats = [e.at for e in s.events]
+        assert ats == sorted(ats)  # candidates are always chronological
+        return True
+
+    shrink_timing(sched, still_fails, max_probes=15)
+    assert len(calls) <= 16
+
+
+def test_timing_shrinker_empty_and_single_event():
+    from repro.core.nemesis import Crash, Event, Schedule
+    from repro.core.scenarios import shrink_timing
+
+    empty = Schedule("empty", 0, ())
+    assert shrink_timing(empty, lambda s: True) == empty
+    one = Schedule("one", 0, (Event(0.5, Crash("p0")),))
+    shrunk = shrink_timing(one, lambda s: True)
+    assert len(shrunk.events) == 1
+    assert shrunk.events[0].at == pytest.approx(0.0, abs=1e-6)
+
+
 def test_shrink_failing_scenario_runs_real_replays():
     """Wire the shrinker to a real scenario run whose predicate is
     synthetic (violations are rare by design): 'fails' iff the schedule

@@ -207,9 +207,27 @@ def test_shard_scenario_replay_is_byte_for_byte():
 def test_sharding_throughput_scales():
     from benchmarks.bench_sharding import run_one
 
-    one = run_one(1, duration=0.1)
-    four = run_one(4, duration=0.1)
+    # The PR-3 scaling anchor, on the model it was defined on (one frame
+    # per wire message, no egress coalescing).
+    one = run_one(1, duration=0.1, egress_coalescing=False)
+    four = run_one(4, duration=0.1, egress_coalescing=False)
     assert four["commands_per_sec"] >= 2.0 * one["commands_per_sec"], (
         one,
         four,
     )
+
+
+@pytest.mark.slow
+def test_wire_plane_lifts_4shard_throughput():
+    """The wire-plane acceptance anchor: egress frame coalescing must buy
+    >= 1.5x simulated cmds/s at 4 shards / batch 16 over the
+    pre-wire-plane egress model."""
+    from benchmarks.bench_sharding import run_one
+
+    pre = run_one(4, duration=0.1, egress_coalescing=False)
+    wire = run_one(4, duration=0.1, egress_coalescing=True)
+    assert wire["commands_per_sec"] >= 1.5 * pre["commands_per_sec"], (
+        pre,
+        wire,
+    )
+    assert wire["frames_coalesced"] > 0
