@@ -1,0 +1,170 @@
+"""Process plane throughput: real multi-process consensus vs in-process TCP.
+
+Everything before the proc plane measured the protocol inside one
+interpreter; this benchmark crosses real process boundaries.  Three
+numbers go into ``BENCH_proc.json``:
+
+  * ``tcp_inprocess`` — the PR-4 baseline: every node on one
+    ``TcpTransport`` in a single process (socket hops, no process hops).
+  * ``proc_steady``   — the same topology with every node its own OS
+    process (the parent hosts only the pipelined client), including the
+    durability tax: acceptors/replicas persist state *before* every
+    reply, which is the crash-recovery contract the in-process backends
+    only simulate.
+  * ``proc_reconfig_under_fire`` — the Section 8 claim measured across
+    real process boundaries: acceptor reconfigurations fired every
+    ``RECONFIG_PERIOD`` during the second half of the run; the dip is
+    the under-fire window's rate over the steady window's.
+
+Safety is asserted on both backends (oracle checks in-process; the
+merged persisted-state invariant suite for proc) — an unsafe benchmark
+run is a failed benchmark.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict
+
+from repro.core import ClusterSpec, PipelinedClient
+from repro.core.proposer import Options
+
+from . import common
+
+WINDOW = 32  # pipelined commands in flight
+RECONFIG_PERIOD = 0.5
+
+
+def _spec() -> ClusterSpec:
+    # phase2_retry well under RECONFIG_PERIOD: a slot caught mid-swap is
+    # re-proposed in the new round promptly, so the dip measures the
+    # protocol (matchmaking + config switch), not a retransmission timer.
+    # Adaptive flush (PR 3): partial batches drain at quiescence instead
+    # of waiting out the fixed interval — over real processes every hop
+    # would otherwise pay the full flush-interval floor.
+    return ClusterSpec(
+        f=1,
+        n_clients=0,
+        options=Options(
+            batch_max=8,
+            batch_flush_interval=2e-3,
+            batch_flush_adaptive=True,
+            phase2_retry_timeout=0.1,
+        ),
+        client_retry_timeout=0.25,
+    )
+
+
+def _pipelined(t, leader_provider) -> PipelinedClient:
+    client = PipelinedClient(
+        "bench-c0", leader_provider, window=WINDOW, retry_timeout=0.25
+    )
+    t.register(client)
+    return client
+
+
+def _rate(client: PipelinedClient, t0: float, t1: float) -> float:
+    n = sum(1 for (t, _lat) in client.latencies if t0 <= t < t1)
+    return n / max(t1 - t0, 1e-9)
+
+
+def run_tcp_baseline(duration: float, *, seed: int = 0) -> Dict[str, Any]:
+    spec = _spec()
+    t, dep = spec.deploy("tcp", seed=seed)
+    client = _pipelined(t, lambda: dep.leader.addr)
+    client.start()
+    t.run(duration + 0.5, until=lambda: False)
+    client.stop()
+    dep.clients.append(client)
+    dep.check_all()
+    warm = 0.5
+    rate = _rate(client, warm, warm + duration)
+    return {"cmds_per_s": rate, "completed": client.completed}
+
+
+def run_proc(duration: float, *, seed: int = 0) -> Dict[str, Any]:
+    """One proc deployment, three wall-clock phases: warmup, steady, and
+    reconfig-under-fire (a random acceptor swap every RECONFIG_PERIOD)."""
+    spec = _spec()
+    t, dep = spec.deploy("proc", seed=seed)
+    try:
+        client = _pipelined(t, lambda: dep.supervisor.leader_of(0))
+        dep.clients.append(client)
+        warm = 1.0
+        steady_end = warm + duration
+        fire_end = steady_end + duration
+        t.call_at(0.0, client.start)
+        fire_t = steady_end
+        while fire_t < fire_end - 0.1:
+            t.call_at(fire_t, lambda: dep.reconfigure_random(0))
+            fire_t += RECONFIG_PERIOD
+        t.run(fire_end + 0.2)
+        client.stop()
+        dep.shutdown()
+        shadow, violations = dep.gather()
+        assert not violations, f"UNSAFE BENCH RUN: {violations[:3]}"
+        steady = _rate(client, warm, steady_end)
+        fire = _rate(client, steady_end, fire_end)
+        return {
+            "workers": len(dep.supervisor.addrs),
+            "steady_cmds_per_s": steady,
+            "under_fire_cmds_per_s": fire,
+            "reconfig_dip": fire / steady if steady else 0.0,
+            "completed": client.completed,
+            "chosen_slots": len(shadow.oracle.chosen),
+        }
+    finally:
+        dep.shutdown()
+
+
+def main(fast: bool = False) -> Dict[str, Any]:
+    duration = 2.0 if fast else 5.0
+    tcp = run_tcp_baseline(duration)
+    common.record("proc", backend="tcp_inprocess", **tcp)
+    proc = run_proc(duration)
+    common.record("proc", backend="proc", **proc)
+    result = {
+        "workload": {
+            "pipelined_window": WINDOW,
+            "batch_max": 8,
+            "duration_s": duration,
+            "reconfig_period_s": RECONFIG_PERIOD,
+            # Multi-process throughput is core-bound: ~19 interpreters
+            # time-share this many CPUs (in-process TCP needs only one).
+            "cpus": os.cpu_count(),
+        },
+        "tcp_inprocess": tcp,
+        "proc_steady": {
+            "workers": proc["workers"],
+            "cmds_per_s": proc["steady_cmds_per_s"],
+            "vs_tcp_inprocess": (
+                proc["steady_cmds_per_s"] / tcp["cmds_per_s"]
+                if tcp["cmds_per_s"]
+                else 0.0
+            ),
+        },
+        "proc_reconfig_under_fire": {
+            "cmds_per_s": proc["under_fire_cmds_per_s"],
+            "dip_vs_steady": proc["reconfig_dip"],
+        },
+    }
+    out = os.environ.get("BENCH_PROC_JSON", "BENCH_proc.json")
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    return result
+
+
+if __name__ == "__main__":
+    fast = "--smoke" in sys.argv
+    result = main(fast=fast)
+    common.emit_csv()
+    print(
+        f"\nin-process TCP: {result['tcp_inprocess']['cmds_per_s']:.0f} cmds/s"
+        f"\nproc ({result['proc_steady']['workers']} worker processes): "
+        f"{result['proc_steady']['cmds_per_s']:.0f} cmds/s "
+        f"({result['proc_steady']['vs_tcp_inprocess']:.2f}x of in-process)"
+        f"\nreconfig-under-fire dip across process boundaries: "
+        f"{result['proc_reconfig_under_fire']['dip_vs_steady']:.3f}"
+    )

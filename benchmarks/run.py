@@ -32,6 +32,7 @@ def main() -> None:
         bench_leader_failure,
         bench_matchmaker_reconfig,
         bench_nemesis,
+        bench_proc,
         bench_reconfiguration,
         bench_roofline,
         bench_sharding,
@@ -52,6 +53,7 @@ def main() -> None:
         ("wire plane codec + tcp", bench_wire.main),
         ("sharded log plane", bench_sharding.main),
         ("sec8 reconfiguration under fire", bench_nemesis.main),
+        ("process plane (one OS process per node)", lambda: bench_proc.main(fast=True)),
         ("elastic control plane", bench_elastic.main),
         ("roofline table", bench_roofline.main),
     ]

@@ -26,13 +26,23 @@ from .nemesis import (
     Heal,
     Nemesis,
     Partition,
+    Pause,
     Restart,
+    Resume,
     Schedule,
     Storm,
     check_invariants,
 )
 from .net import AsyncTransport
 from .tcp import TcpTransport
+from .proc import (
+    ProcDeployment,
+    ProcTransport,
+    Supervisor,
+    deploy_proc,
+    proc_scenario_names,
+    run_proc_scenario,
+)
 from .oracle import Oracle, SafetyViolation
 from .proposer import Options, Proposer
 from .quorums import Configuration, QuorumSpec
@@ -69,13 +79,15 @@ __all__ = [
     "FaultPlane", "Heal", "HorizontalProposer", "KVStoreSM",
     "MMReconfigCoordinator", "Matchmaker", "NEG_INF", "Nemesis",
     "NetworkConfig", "Node", "NoopSM", "Options", "Oracle", "Partition",
-    "PipelinedClient", "ProtocolNode", "Proposer", "QuorumSpec", "Replica",
-    "Restart", "Round", "SCENARIO_NAMES", "SafetyViolation",
+    "Pause", "PipelinedClient", "ProcDeployment", "ProcTransport",
+    "ProtocolNode", "Proposer", "QuorumSpec",
+    "Replica", "Restart", "Resume", "Round", "SCENARIO_NAMES", "SafetyViolation",
     "ScenarioFailure", "ScenarioResult", "Schedule", "Send", "SetTimer",
     "Shard", "ShardRouter", "Simulator", "SingleDecreeProposer",
-    "SlotOwnership", "SlotState", "StateMachine", "Storm", "TcpTransport",
-    "Transport", "build", "check_invariants", "initial_round",
-    "make_transport", "max_round", "on", "run_matrix", "run_scenario",
+    "SlotOwnership", "SlotState", "StateMachine", "Storm", "Supervisor",
+    "TcpTransport", "Transport", "build", "check_invariants", "deploy_proc",
+    "initial_round", "make_transport", "max_round", "on",
+    "proc_scenario_names", "run_matrix", "run_proc_scenario", "run_scenario",
     "shard_of_command", "shard_of_slot", "shrink_failing_scenario",
     "shrink_schedule", "shrink_timing", "wire",
 ]

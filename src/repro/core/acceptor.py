@@ -32,6 +32,24 @@ class Acceptor(Node):
         self.phase1_count = 0
         self.phase2_count = 0
 
+    # -- durability (proc plane) -------------------------------------------
+    # The paper's crash-recovery model: an acceptor's promise, votes and
+    # chosen watermark are persisted synchronously *before* any reply
+    # leaves the process (the proc plane's worker host enforces the
+    # before-send ordering); a restarted process reloads them and answers
+    # exactly as if it had only been slow.
+    def persistent_state(self) -> Dict[str, Any]:
+        return {
+            "round": self.round,
+            "votes": dict(self.votes),
+            "chosen_watermark": self.chosen_watermark,
+        }
+
+    def load_persistent_state(self, state: Dict[str, Any]) -> None:
+        self.round = state["round"]
+        self.votes = dict(state["votes"])
+        self.chosen_watermark = state["chosen_watermark"]
+
     @on(m.StoredWatermark)
     def _on_stored_watermark(self, src: Address, msg: m.StoredWatermark) -> None:
         if msg.round >= self.round:

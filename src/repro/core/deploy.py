@@ -200,8 +200,11 @@ def make_transport(
     ``"sim"`` — the deterministic discrete-event simulator;
     ``"async"`` — the in-process asyncio event loop (``net.AsyncTransport``);
     ``"tcp"`` — real sockets, one per node, binary wire frames
-    (``tcp.TcpTransport``).  All three run the same role classes and the
-    same nemesis fault schedules.
+    (``tcp.TcpTransport``);
+    ``"proc"`` — one OS process per node with a supervisor in the parent
+    (``proc.ProcTransport``; use ``ClusterSpec.deploy("proc")`` to spawn
+    the workers).  All four run the same role classes and the same
+    nemesis fault schedules.
     """
     if backend == "sim":
         return Simulator(seed=seed, net=net)
@@ -213,6 +216,10 @@ def make_transport(
         from .tcp import TcpTransport
 
         return TcpTransport(seed=seed, net=net)
+    if backend == "proc":
+        from .proc import ProcTransport
+
+        return ProcTransport(seed=seed, net=net)
     raise ValueError(f"unknown transport backend {backend!r}")
 
 
@@ -302,6 +309,13 @@ class ClusterSpec:
     def router_addr(self) -> str:
         return "router"
 
+    def replica_ack_stride(self) -> int:
+        """Sharded deployments coalesce replication-watermark acks (they
+        fan out to every shard's proposers); unsharded keeps
+        ack-per-progression.  Shared by ``instantiate`` and the proc
+        plane's ``build_worker_node`` so the two planes can't drift."""
+        return 16 if max(1, self.num_shards) > 1 else 1
+
     # -- construction ----------------------------------------------------
     def instantiate(self, transport: Transport) -> Deployment:
         """Construct and register every role node on ``transport``."""
@@ -332,9 +346,7 @@ class ClusterSpec:
                 peers=rep_addrs,
                 batch=batch,
                 num_shards=S,
-                # Sharded: coalesce watermark acks (they fan out to every
-                # shard's proposers); unsharded keeps ack-per-progression.
-                ack_stride=16 if S > 1 else 1,
+                ack_stride=self.replica_ack_stride(),
             )
             for a in rep_addrs
         ]
@@ -454,9 +466,15 @@ class ClusterSpec:
         net: Optional[NetworkConfig] = None,
     ) -> Tuple[Transport, Deployment]:
         """One-call backend-parameterized construction: build the named
-        transport (``"sim"`` / ``"async"`` / ``"tcp"``) and instantiate
-        this spec on it.  Returns ``(transport, deployment)`` — drive the
-        transport (``run_for`` / ``run``) yourself."""
+        transport (``"sim"`` / ``"async"`` / ``"tcp"`` / ``"proc"``) and
+        instantiate this spec on it.  Returns ``(transport, deployment)``
+        — drive the transport (``run_for`` / ``run``) yourself.  The proc
+        backend spawns one OS process per node (clients stay in this
+        process); tear it down with ``deployment.shutdown()``."""
+        if backend == "proc":
+            from .proc import deploy_proc
+
+            return deploy_proc(self, seed=seed, net=net)
         transport = make_transport(backend, seed=seed, net=net)
         return transport, self.instantiate(transport)
 

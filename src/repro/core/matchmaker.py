@@ -46,6 +46,34 @@ class Matchmaker(Node):
         self.match_count = 0
         self.history_sizes = []
 
+    # -- durability (proc plane) -------------------------------------------
+    # Everything a matchmaker holds is persistent under the paper's
+    # crash-recovery model: its configuration log L and GC watermark w
+    # (per shard), the Section 6 freeze/bootstrap flags, and its
+    # single-decree acceptor state for choosing M_new.  The proc worker
+    # host persists this before any reply leaves the process.
+    def persistent_state(self) -> Dict[str, Any]:
+        return {
+            "shard_logs": {s: dict(log) for s, log in self.shard_logs.items()},
+            "shard_gc": dict(self.shard_gc),
+            "stopped": self.stopped,
+            "enabled": self.enabled,
+            "bootstrapped": self.bootstrapped,
+            "mm_ballot": self.mm_ballot,
+            "mm_vb": self.mm_vb,
+            "mm_vv": self.mm_vv,
+        }
+
+    def load_persistent_state(self, state: Dict[str, Any]) -> None:
+        self.shard_logs = {s: dict(log) for s, log in state["shard_logs"].items()}
+        self.shard_gc = dict(state["shard_gc"])
+        self.stopped = state["stopped"]
+        self.enabled = state["enabled"]
+        self.bootstrapped = state["bootstrapped"]
+        self.mm_ballot = state["mm_ballot"]
+        self.mm_vb = state["mm_vb"]
+        self.mm_vv = state["mm_vv"]
+
     # -- shard-0 views (historical field names; tests mutate these) --------
     @property
     def log(self) -> Dict[Round, Configuration]:

@@ -294,6 +294,16 @@ class MMNack:
     ballot: Round
 
 
+@dataclass(frozen=True)
+class SetMatchmakers:
+    """Point a proposer at a new matchmaker set after a Section 6
+    matchmaker reconfiguration completed.  In-process deployments use the
+    coordinator's ``on_complete`` callback directly; multi-process
+    deployments (the proc plane) deliver the same fact as a message."""
+
+    matchmakers: Tuple[Address, ...]
+
+
 # --------------------------------------------------------------------------
 # Leader election / failure detection
 # --------------------------------------------------------------------------

@@ -50,12 +50,17 @@ class MMReconfigCoordinator(Node):
         *,
         f: int = 1,
         on_complete: Optional[Callable[[Tuple[Address, ...]], None]] = None,
+        notify_proposers: Tuple[Address, ...] = (),
         retry_timeout: float = 0.25,
     ):
         super().__init__(addr)
         self.cid = coordinator_id
         self.f = f
         self.on_complete = on_complete
+        # Message-based completion fan-out (the proc plane: proposers live
+        # in other OS processes, so a shared-memory callback can't reach
+        # them).  Works alongside on_complete; either may be unset.
+        self.notify_proposers = tuple(notify_proposers)
         self.retry_timeout = retry_timeout
 
         self.m_old: Tuple[Address, ...] = ()
@@ -206,5 +211,9 @@ class MMReconfigCoordinator(Node):
         self.phase = "idle"
         self.stats.enabled_at = self.now
         self.broadcast(self.m_new, m.MMEnable())
+        if self.notify_proposers:
+            self.broadcast(
+                self.notify_proposers, m.SetMatchmakers(matchmakers=self.m_new)
+            )
         if self.on_complete is not None:
             self.on_complete(self.m_new)

@@ -132,6 +132,32 @@ class DiskLoss:
 
 
 @dataclass(frozen=True)
+class Pause:
+    """Wedge ``addr`` without killing it — the gray failure: the process
+    is alive and its connections stay up, but it executes nothing.
+
+    The proc plane delivers this as a real ``SIGSTOP``; the in-process
+    transports model it as delivery-deferral (inbound messages and the
+    node's own timers queue, in order, until :class:`Resume`).  Unlike a
+    crash, nothing is lost: on resume the whole backlog floods in at
+    once, which is exactly the stale-round burst the protocol must nack
+    its way through.  Unlike a partition, the node's peers see an open,
+    accepting connection the entire time — the failure detector's
+    confirm-over-consecutive-rounds logic is what distinguishes wedged
+    from slow."""
+
+    addr: Address
+
+
+@dataclass(frozen=True)
+class Resume:
+    """Un-wedge a :class:`Pause`d node (SIGCONT); its deferred inbound
+    messages and timers run in their original order."""
+
+    addr: Address
+
+
+@dataclass(frozen=True)
 class Heal:
     """Remove every partition, storm and clock skew currently installed."""
 
@@ -431,13 +457,17 @@ class Nemesis:
         *,
         check: Optional[Callable[[Any], List[str]]] = check_invariants,
         on_event: Optional[Callable[[Event], None]] = None,
+        plane: Optional[FaultPlane] = None,
     ):
         self.dep = dep
         self.transport = dep.sim
         self.schedule = schedule
         self.check = check
         self.on_event = on_event
-        self.plane = FaultPlane()
+        # ``plane`` lets a deployment substitute a FaultPlane subclass —
+        # the proc plane fans partition/storm/skew installs out to every
+        # worker process's own plane.
+        self.plane = plane if plane is not None else FaultPlane()
         self.transport.faults = self.plane
         self.event_log: List[str] = []
         self.violations: List[str] = []
@@ -462,6 +492,10 @@ class Nemesis:
             self.plane.add_storm(f)
         elif isinstance(f, ClockSkew):
             self.plane.set_skew(f.addr, f.scale, f.offset)
+        elif isinstance(f, Pause):
+            self.transport.pause(f.addr)
+        elif isinstance(f, Resume):
+            self.transport.resume(f.addr)
         elif isinstance(f, DiskLoss):
             self.transport.nodes[f.addr].lose_disk()
         elif isinstance(f, Heal):

@@ -69,6 +69,9 @@ class AsyncTransport:
         self._t0 = 0.0
         self._pending: List[Tuple[Address, Any, Optional[_AsyncTimer]]] = []
         self._egress_ready: Dict[Address, float] = {}
+        # Paused (SIGSTOP-modelled) nodes: addr -> deferred thunks
+        # (deliveries and timer fires), replayed in order on resume.
+        self._paused: Dict[Address, List[Callable[[], None]]] = {}
         # Nemesis interposition point (nemesis.FaultPlane), identical to
         # Simulator.faults — this is what gives the asyncio transport
         # partitions, storms and heals with the same declarative schedules.
@@ -103,7 +106,20 @@ class AsyncTransport:
         self.nodes[addr].crash(clean=clean)
 
     def restart(self, addr: Address, *, wipe_volatile: bool = True) -> None:
+        # A restart always yields a *running* process (matches proc:
+        # respawn discards any SIGSTOP and its deferred backlog).
+        self._paused.pop(addr, None)
         self.nodes[addr].restart(wipe_volatile=wipe_volatile)
+
+    def pause(self, addr: Address) -> None:
+        """SIGSTOP semantics: defer the node's deliveries and timers (in
+        order) until :meth:`resume`; nothing is lost and peers keep their
+        connections up."""
+        self._paused.setdefault(addr, [])
+
+    def resume(self, addr: Address) -> None:
+        for thunk in self._paused.pop(addr, ()):
+            thunk()
 
     def call_at(self, when: float, fn: Callable[[], None]) -> None:
         """Schedule a global (nemesis / scenario-script) callback at
@@ -161,6 +177,9 @@ class AsyncTransport:
         if node is None or node.failed:
             self.messages_dropped += 1
             return
+        if self._paused and dst in self._paused:
+            self._paused[dst].append(lambda: self._deliver(src, dst, msg))
+            return
         self.messages_delivered += 1
         node.on_message(src, msg)
 
@@ -180,6 +199,11 @@ class AsyncTransport:
                 node is not None
                 and (node.failed or node.life_epoch != armed_epoch)
             ):
+                return
+            if self._paused and src in self._paused:
+                # A stopped process's timers fire only once it is
+                # continued (re-validated then: cancel/crash still win).
+                self._paused[src].append(fire)
                 return
             t.fired = True
             fn()

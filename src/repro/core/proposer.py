@@ -237,6 +237,12 @@ class Proposer(Node):
         """Point at a new matchmaker set (after a Section 6 reconfiguration)."""
         self.matchmakers = tuple(matchmakers)
 
+    @on(m.SetMatchmakers)
+    def _on_set_matchmakers(self, src: Address, msg: m.SetMatchmakers) -> None:
+        # The message form of the coordinator's on_complete callback: the
+        # proc plane's processes have no shared memory to call through.
+        self.set_matchmakers(msg.matchmakers)
+
     def become_leader(self, config: Configuration) -> None:
         """Take over leadership (full Phase 1; no bypass)."""
         base = self.max_witnessed if self.max_witnessed != NEG_INF else None

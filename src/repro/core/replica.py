@@ -121,6 +121,41 @@ class Replica(Node):
         elif self._resync_pending:
             self._arm_resync_retry()  # crash interrupted a re-sync: resume
 
+    # -- durability (proc plane) -------------------------------------------
+    # The replica's log, execution watermark and at-most-once dedup table
+    # are the f+1-durability substrate of GC Scenario 3: they are
+    # persisted before any ReplicaAck or ClientReply leaves the process
+    # (the proc worker host enforces the ordering).  The state machine
+    # itself is NOT serialized — execution is deterministic and
+    # slot-ordered, so a restarted process replays the executed prefix
+    # through a fresh instance (without re-sending client replies).
+    def persistent_state(self) -> Dict[str, Any]:
+        return {
+            "entries": dict(self.elog.entries),
+            "watermark": self.elog.watermark,
+            "executed": dict(self.executed),
+            "last_acked": self._last_acked,
+        }
+
+    def load_persistent_state(self, state: Dict[str, Any]) -> None:
+        self.elog = ExecutionLog(num_shards=self.elog.num_shards)
+        for slot, value in state["entries"].items():
+            self.elog.insert(slot, value)
+        self.elog.watermark = state["watermark"]
+        self.executed = dict(state["executed"])
+        self._last_acked = state["last_acked"]
+        # Rebuild the SM by replaying the executed prefix with the same
+        # at-most-once rule live execution used; no messages are emitted.
+        self.sm = self.sm_factory()
+        seen: set = set()
+        for slot in range(self.elog.watermark):
+            value = self.elog.entries.get(slot)
+            if isinstance(value, m.Command) and value.cmd_id not in seen:
+                seen.add(value.cmd_id)
+                self.sm.apply(value.op)
+        self._disk_lost = False
+        self._resync_pending = False
+
     # -- disk-loss fault model ---------------------------------------------
     def lose_disk(self) -> None:
         """Wipe this replica's persisted state (nemesis.DiskLoss): the

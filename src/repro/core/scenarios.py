@@ -22,6 +22,7 @@ The catalog (paper sections each one stresses):
   fast_paxos_recovery                   Section 7 (Algorithm 5)
   gc_during_failover                    Section 5 (Scenarios 1-3)
   shard_leader_failover                 sharded log plane (ARCHITECTURE)
+  pause_during_reconfig                 gray failures (SIGSTOP; proc plane)
   clock_skew_churn                      Section 2.1 (no clock sync)
   ====================================  =============================
 
@@ -53,8 +54,10 @@ from .nemesis import (
     MMReconfigure,
     Nemesis,
     Partition,
+    Pause,
     ReconfigureRandom,
     Restart,
+    Resume,
     Schedule,
     StartClients,
     StopClients,
@@ -370,6 +373,40 @@ def _replica_disk_loss(seed: int) -> _Scenario:
     )
 
 
+def _pause_during_reconfig(seed: int) -> _Scenario:
+    """Gray failure (wedged-but-connected): a matchmaker or an acceptor is
+    SIGSTOPped across a reconfiguration window.  Its peers see an open,
+    accepting connection the whole time — no RST, no EOF — so only quorum
+    logic (the other 2f matchmakers / acceptors answer) keeps both the
+    Matchmaking phase and the hot path moving.  On resume the victim's
+    entire deferred backlog floods in at once: stale MatchA/Phase2A from
+    superseded rounds that it must nack or ignore without ever
+    contradicting what the live quorums chose.  The proc backend delivers
+    this as a real SIGSTOP/SIGCONT; sim and tcp model it as in-order
+    delivery deferral."""
+    rng = _rng("pause_during_reconfig", seed)
+    spec = _base_cluster()
+    pool = list(spec.matchmaker_addrs()) + list(spec.acceptor_addrs())
+    victim = rng.choice(pool)
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.07), Pause(victim)),
+        Event(_jitter(rng, 0.1), ReconfigureRandom()),
+        Event(_jitter(rng, 0.18), ReconfigureRandom()),
+        Event(_jitter(rng, 0.26), Resume(victim)),
+        Event(_jitter(rng, 0.34), ReconfigureRandom()),
+        Event(0.48, StopClients()),
+    ]
+    return _Scenario(
+        cluster=spec,
+        schedule=Schedule("pause_during_reconfig", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.64,
+        steady_window=(0.02, 0.07),
+        faulty_window=(0.07, 0.45),
+    )
+
+
 def _clock_skew_churn(seed: int) -> _Scenario:
     """Timer-drift adversary: the leader's clock runs slow (heartbeats,
     Phase-2 retries and flush timers all late) and one acceptor's runs
@@ -409,6 +446,7 @@ _BUILDERS: Dict[str, Callable[[int], _Scenario]] = {
     "gc_during_failover": _gc_during_failover,
     "shard_leader_failover": _shard_leader_failover,
     "replica_disk_loss": _replica_disk_loss,
+    "pause_during_reconfig": _pause_during_reconfig,
     "clock_skew_churn": _clock_skew_churn,
 }
 
@@ -435,11 +473,17 @@ def run_scenario(
     """Run one adversarial scenario; returns the (unraised) result.
 
     ``transport`` is ``"sim"`` (deterministic, byte-for-byte replayable),
-    ``"async"`` (wall-clock asyncio; safety checks only), or ``"tcp"``
-    (real per-node sockets + binary wire frames; safety checks only).
+    ``"async"`` (wall-clock asyncio; safety checks only), ``"tcp"``
+    (real per-node sockets + binary wire frames; safety checks only), or
+    ``"proc"`` (one OS process per node, faults as real POSIX signals,
+    invariants checked at teardown over persisted state).
     ``schedule`` overrides the builder's schedule (same cluster/topology)
     — the shrinker re-runs a scenario with event subsequences this way.
     """
+    if transport == "proc":
+        from .proc import run_proc_scenario
+
+        return run_proc_scenario(name, seed, schedule=schedule)
     if name == "fast_paxos_recovery":
         return _run_fast_paxos(seed, transport)
     sc = _BUILDERS[name](seed)

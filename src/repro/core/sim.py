@@ -169,6 +169,9 @@ class _Delivery:
         if node is None or node.failed:
             sim.messages_dropped += 1
             return
+        if sim._paused and self.dst in sim._paused:
+            sim._paused[self.dst].append(self)  # SIGSTOP: defer, don't drop
+            return
         sim.messages_delivered += 1
         node.on_message(self.src, self.msg)
 
@@ -189,6 +192,9 @@ class _Frame:
         node = sim.nodes.get(self.dst)
         if node is None:
             sim.messages_dropped += len(self.msgs)
+            return
+        if sim._paused and self.dst in sim._paused:
+            sim._paused[self.dst].append(self)
             return
         src = self.src
         for msg in self.msgs:
@@ -218,6 +224,11 @@ class _TimerFire:
         t = self.timer
         node = self.node
         if t.cancelled or node.failed or node.life_epoch != self.epoch:
+            return
+        if sim._paused and node.addr in sim._paused:
+            # A SIGSTOPped process's timers don't fire; they run (and are
+            # re-validated) when the process is continued.
+            sim._paused[node.addr].append(self)
             return
         t.fired = True
         self.fn()
@@ -253,6 +264,9 @@ class Simulator:
         self.nodes: Dict[Address, Node] = {}
         self._partitions: List[Tuple[Set[Address], Set[Address]]] = []
         self._egress_ready: Dict[Address, float] = {}
+        # Paused (SIGSTOP-modelled) nodes: addr -> deferred event records,
+        # re-enqueued in order on resume.  Empty dict = fast-path falsy.
+        self._paused: Dict[Address, List[Any]] = {}
         # Wire-plane frame coalescing state: the open (still-serializing)
         # frame per (src, dst) pair, joinable until its depart instant.
         self._open_frames: Dict[Tuple[Address, Address], _Frame] = {}
@@ -427,7 +441,21 @@ class Simulator:
         self.nodes[addr].crash(clean=clean)
 
     def restart(self, addr: Address, *, wipe_volatile: bool = True) -> None:
+        # A restart always yields a *running* process: any SIGSTOP (and
+        # its deferred backlog) died with the old incarnation — matching
+        # the proc plane, where a respawned process is never stopped.
+        self._paused.pop(addr, None)
         self.nodes[addr].restart(wipe_volatile=wipe_volatile)
+
+    def pause(self, addr: Address) -> None:
+        """SIGSTOP semantics: the node stops executing (no deliveries, no
+        timers) but loses nothing; peers still see it as connected."""
+        self._paused.setdefault(addr, [])
+
+    def resume(self, addr: Address) -> None:
+        """SIGCONT: replay the deferred backlog in its original order."""
+        for record in self._paused.pop(addr, ()):
+            self._push(self.now, record)
 
     def step(self) -> bool:
         if not self._heap:

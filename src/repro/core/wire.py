@@ -5,10 +5,16 @@ wire tag and a compact binary encoding.  The format is designed for the
 command hot path of the paper's Section 8 deployment (batched MultiPaxos
 over sockets):
 
-  * **Frames** are length-prefixed: ``[u32 little-endian payload length]
-    [payload]``; a payload is ``[u8 message tag][fields...]``.  Frames
-    self-delimit on a byte stream, so the TCP transport (``core/tcp.py``)
-    reads them with two ``readexactly`` calls and no scanning.
+  * **Frames** are length-prefixed and versioned: ``[u32 little-endian
+    payload length][payload]`` where a payload is ``[u8 frame version]
+    [u8 message tag][fields...]``.  Frames self-delimit on a byte
+    stream, so the TCP transport (``core/tcp.py``) reads them with two
+    ``readexactly`` calls and no scanning.  The version byte
+    (``FRAME_VERSION``) lets a reader replay frames recorded by an older
+    codec: ``decode_frame`` dispatches through a per-version decoder
+    registry, and an unknown *newer* version fails loud instead of
+    misparsing.  The same byte versions the proc plane's on-disk state
+    files (``encode_state``/``decode_state``).
   * **Headers are struct-packed**: hot-path messages (Phase2A/Phase2B/
     Chosen/ClientRequest/ClientReply/ReplicaAck) have hand-written
     encoders whose fixed fields pack as varints right behind the tag —
@@ -55,6 +61,14 @@ __all__ = [
     "frame",
     "unframe",
     "FrameReader",
+    "FRAME_VERSION",
+    "decode_frame",
+    "register_frame_version",
+    "encode_value",
+    "decode_value",
+    "encode_state",
+    "decode_state",
+    "STATE_VERSION",
     "wire_tag",
     "registered_types",
     "MESSAGE_TYPES",
@@ -466,16 +480,99 @@ _register(
 )
 
 
+# Varint-delta slot runs (ROADMAP wire-plane follow-on): inside a Batch,
+# consecutive Phase2B messages sharing one round — the dominant ack shape
+# of the batched hot path — collapse to a single run header plus zigzag
+# slot deltas, and consecutive Chosen messages share one run header with
+# per-entry (delta, value) pairs.  Runs exist only inside Batch payloads;
+# top-level frames never emit these tags.
+_TAG_P2B_RUN = 41
+_TAG_CHOSEN_RUN = 42
+_RUN_MIN = 2  # a run of two already beats two full headers
+
+
+def _batch_groups(msgs: Tuple[Any, ...]) -> List[Any]:
+    """Partition a batch's messages into encodable items: single messages,
+    ``("p2b", round, [slots])`` runs and ``("chosen", [(slot, value)])``
+    runs.  Grouping only ever merges *consecutive* messages, so decoding
+    reproduces the original order exactly."""
+    groups: List[Any] = []
+    i, n = 0, len(msgs)
+    while i < n:
+        msg = msgs[i]
+        t = type(msg)
+        if t is m.Phase2B:
+            j = i + 1
+            while j < n and type(msgs[j]) is m.Phase2B and msgs[j].round == msg.round:
+                j += 1
+            if j - i >= _RUN_MIN:
+                groups.append(("p2b", msg.round, [x.slot for x in msgs[i:j]]))
+                i = j
+                continue
+        elif t is m.Chosen:
+            j = i + 1
+            while j < n and type(msgs[j]) is m.Chosen:
+                j += 1
+            if j - i >= _RUN_MIN:
+                groups.append(("chosen", [(x.slot, x.value) for x in msgs[i:j]]))
+                i = j
+                continue
+        groups.append(msg)
+        i += 1
+    return groups
+
+
 def _enc_batch(w: _Writer, x: m.Batch) -> None:
-    _w_uvarint(w.out, len(x.messages))
-    for sub in x.messages:
-        tag, enc = _ENCODERS[type(sub)]
-        w.out.append(bytes((tag,)))
-        enc(w, sub)
+    groups = _batch_groups(x.messages)
+    _w_uvarint(w.out, len(groups))
+    for g in groups:
+        if type(g) is tuple and g[0] == "p2b":
+            _, rnd, slots = g
+            w.out.append(bytes((_TAG_P2B_RUN,)))
+            _w_round(w, rnd)
+            _w_uvarint(w.out, len(slots))
+            _w_varint(w.out, slots[0])
+            for k in range(1, len(slots)):
+                _w_varint(w.out, slots[k] - slots[k - 1])
+        elif type(g) is tuple and g[0] == "chosen":
+            _, entries = g
+            w.out.append(bytes((_TAG_CHOSEN_RUN,)))
+            _w_uvarint(w.out, len(entries))
+            prev = entries[0][0]
+            _w_varint(w.out, prev)
+            _w_value(w, entries[0][1])
+            for slot, value in entries[1:]:
+                _w_varint(w.out, slot - prev)
+                _w_value(w, value)
+                prev = slot
+        else:
+            tag, enc = _ENCODERS[type(g)]
+            w.out.append(bytes((tag,)))
+            enc(w, g)
 
 
-def _dec_batch(r: _Reader) -> m.Batch:
-    return tuple(_DECODERS[r.u8()](r) for _ in range(r.uvarint()))
+def _dec_batch(r: _Reader) -> Tuple[Any, ...]:
+    out: List[Any] = []
+    for _ in range(r.uvarint()):
+        tag = r.u8()
+        if tag == _TAG_P2B_RUN:
+            rnd = _r_round(r)
+            count = r.uvarint()
+            slot = r.varint()
+            out.append(m.Phase2B(round=rnd, slot=slot))
+            for _k in range(count - 1):
+                slot += r.varint()
+                out.append(m.Phase2B(round=rnd, slot=slot))
+        elif tag == _TAG_CHOSEN_RUN:
+            count = r.uvarint()
+            slot = r.varint()
+            out.append(m.Chosen(slot=slot, value=_r_value(r)))
+            for _k in range(count - 1):
+                slot += r.varint()
+                out.append(m.Chosen(slot=slot, value=_r_value(r)))
+        else:
+            out.append(_DECODERS[tag](r))
+    return tuple(out)
 
 
 _register(7, m.Batch, _enc_batch, lambda r: m.Batch(messages=_dec_batch(r)))
@@ -820,6 +917,25 @@ _register(
 _register(39, m.Command, _w_cmd, _r_cmd)
 _register(40, m.Noop, lambda w, x: None, lambda r: m.NOOP)
 
+# Tags 41/42 are reserved for the in-batch Phase2B/Chosen run encodings
+# above; they never appear at the top level of a frame.
+
+
+def _enc_set_matchmakers(w: _Writer, x: m.SetMatchmakers) -> None:
+    _w_uvarint(w.out, len(x.matchmakers))
+    for a in x.matchmakers:
+        _w_str(w, a)
+
+
+_register(
+    43,
+    m.SetMatchmakers,
+    _enc_set_matchmakers,
+    lambda r: m.SetMatchmakers(
+        matchmakers=tuple(_r_str(r) for _ in range(r.uvarint()))
+    ),
+)
+
 # Escape hatch so the codec is total over *any* message object (e.g. the
 # horizontal baseline's ConfigChange riding inside Chosen values is
 # covered by the value encoder; a whole unknown message type pickles).
@@ -862,17 +978,45 @@ def decode(payload: bytes) -> Any:
     return dec(r)
 
 
+# -- frame versioning -------------------------------------------------------
+# The first payload byte of every frame is the codec version.  Decoding
+# dispatches through a per-version registry so a newer reader can replay
+# frames (or on-disk state files) recorded by an older codec, and an
+# unknown *newer* version fails loud instead of misparsing.  Version 1 is
+# the current encoding (everything in this module).
+FRAME_VERSION = 1
+_FRAME_DECODERS: Dict[int, Callable[[bytes], Any]] = {FRAME_VERSION: decode}
+
+
+def register_frame_version(version: int, dec: Callable[[bytes], Any]) -> None:
+    """Register a payload decoder for an older (or experimental) frame
+    version.  ``dec`` receives the payload *without* the version byte."""
+    _FRAME_DECODERS[version] = dec
+
+
+def decode_frame(payload: bytes) -> Any:
+    """Decode one versioned frame payload: [u8 version][tag][fields]."""
+    version = payload[0]
+    dec = _FRAME_DECODERS.get(version)
+    if dec is None:
+        raise ValueError(
+            f"unsupported frame version {version} "
+            f"(this codec speaks {sorted(_FRAME_DECODERS)})"
+        )
+    return dec(payload[1:])
+
+
 def frame(msg: Any) -> bytes:
-    """A full wire frame: [u32 LE payload length][payload]."""
+    """A full wire frame: [u32 LE payload length][u8 version][payload]."""
     payload = encode(msg)
-    return _U32.pack(len(payload)) + payload
+    return _U32.pack(len(payload) + 1) + bytes((FRAME_VERSION,)) + payload
 
 
 def unframe(buf: bytes) -> Tuple[Any, int]:
     """Decode the first frame of ``buf``; returns (message, bytes consumed)."""
     (n,) = _U32.unpack_from(buf)
     end = 4 + n
-    return decode(buf[4:end]), end
+    return decode_frame(buf[4:end]), end
 
 
 class FrameReader:
@@ -891,9 +1035,45 @@ class FrameReader:
             (n,) = _U32.unpack_from(self._buf)
             if len(self._buf) < 4 + n:
                 break
-            msgs.append(decode(bytes(self._buf[4 : 4 + n])))
+            msgs.append(decode_frame(bytes(self._buf[4 : 4 + n])))
             del self._buf[: 4 + n]
         return msgs
+
+
+# -- free-standing values and on-disk state ---------------------------------
+def encode_value(v: Any) -> bytes:
+    """Encode one value through the self-describing value codec."""
+    w = _Writer()
+    _w_value(w, v)
+    return w.bytes_value()
+
+
+def decode_value(data: bytes) -> Any:
+    return _r_value(_Reader(data))
+
+
+# On-disk node state (the proc plane's per-node state files).  Same
+# version byte as the wire: [magic "MP"][u8 version][value-encoded obj].
+_STATE_MAGIC = b"MP"
+STATE_VERSION = FRAME_VERSION
+_STATE_DECODERS: Dict[int, Callable[[bytes], Any]] = {STATE_VERSION: decode_value}
+
+
+def encode_state(obj: Any) -> bytes:
+    return _STATE_MAGIC + bytes((STATE_VERSION,)) + encode_value(obj)
+
+
+def decode_state(data: bytes) -> Any:
+    if data[:2] != _STATE_MAGIC:
+        raise ValueError("not a state file (bad magic)")
+    version = data[2]
+    dec = _STATE_DECODERS.get(version)
+    if dec is None:
+        raise ValueError(
+            f"unsupported state version {version} "
+            f"(this codec speaks {sorted(_STATE_DECODERS)})"
+        )
+    return dec(data[3:])
 
 
 # Every public message dataclass in core/messages.py, discovered by

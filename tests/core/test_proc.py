@@ -1,0 +1,242 @@
+"""Process plane: one OS process per node, faults as real POSIX signals.
+
+The Layer −1 acceptance: the same role classes and the same declarative
+nemesis schedules, but every node is its own interpreter.  ``Crash`` is a
+real SIGKILL/SIGTERM, ``Restart`` a re-spawn recovering from the node's
+on-disk state file (wire-codec serialized, versioned), ``Pause`` a real
+SIGSTOP.  Invariants are checked at teardown over the workers' persisted
+snapshots (replicas/acceptors persist *before* they reply, so the merged
+view is conservative w.r.t. anything a client observed).
+
+The quick tier (tier-1 CI) runs a 3-scenario x 3-seed matrix including
+``shard_leader_failover`` (2 shards, router process) and
+``replica_disk_loss`` (state-file deletion + peer re-sync); the full
+matrix rides the nightly nemesis-soak.
+"""
+
+import time
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    KVStoreSM,
+    make_transport,
+    proc_scenario_names,
+    run_scenario,
+    wire,
+)
+from repro.core.proc import ProcTransport, PROC_TIME_SCALE
+from repro.core.proposer import Options
+
+
+def _smoke_spec(n_clients: int = 2, max_commands: int = 20) -> ClusterSpec:
+    return ClusterSpec(
+        f=1,
+        n_clients=n_clients,
+        sm_factory=KVStoreSM,
+        client_max_commands=max_commands,
+        client_retry_timeout=0.3,
+        options=Options(phase2_retry_timeout=0.2),
+    )
+
+
+def test_make_transport_proc():
+    t = make_transport("proc")
+    assert isinstance(t, ProcTransport)
+    assert t.workdir.exists()
+
+
+def test_proc_cluster_chooses_commands():
+    """End-to-end: 18 worker processes serve 2 parent clients; state
+    files exist for every durable role and the merged invariant suite is
+    green."""
+    spec = _smoke_spec()
+    t, dep = spec.deploy("proc", seed=0)
+    try:
+        for c in dep.clients:
+            c.op_factory = lambda n: ("set", f"k{n % 3}", n)
+            c.start()
+        t.run(20.0, until=lambda: all(c.done for c in dep.clients))
+        assert all(c.done for c in dep.clients), [
+            len(c.latencies) for c in dep.clients
+        ]
+        dep.shutdown()
+        shadow, violations = dep.gather()
+        assert not violations, violations
+        assert len(shadow.oracle.chosen) >= 40
+        # Durable roles persisted real, versioned state files.
+        acc = dep.supervisor.read_state("a0")
+        assert acc is not None and acc["persistent"]["votes"]
+        rep = dep.supervisor.read_state("r0")
+        assert rep is not None and rep["persistent"]["watermark"] >= 40
+        raw = (dep.supervisor.workdir / "state" / "a0.state").read_bytes()
+        assert raw[2] == wire.STATE_VERSION
+    finally:
+        dep.shutdown()
+
+
+def _drain_more_commands(t, dep, extra: int = 10, budget: float = 20.0) -> None:
+    """Phase 2 of the fault tests: after the fault phase, ask every client
+    for ``extra`` MORE commands and run until they complete — proof the
+    cluster made progress *after* the fault, however fast or slow the
+    machine ran phase 1."""
+    for c in dep.clients:
+        c.stop()
+        c.max_commands = c.seq + extra
+        c.done = False
+        c.start()
+    t.run(budget, until=lambda: all(c.done for c in dep.clients))
+    assert all(c.done for c in dep.clients), [len(c.latencies) for c in dep.clients]
+
+
+def test_sigkilled_acceptor_recovers_from_state_file():
+    """The headline durability claim: an acceptor is SIGKILLed mid-run
+    and re-spawned as a fresh interpreter; it reloads its promise/votes/
+    watermark from its state file (written ahead of every reply) and the
+    cluster keeps choosing with every invariant green."""
+    spec = _smoke_spec(n_clients=2, max_commands=None)
+    t, dep = spec.deploy("proc", seed=1)
+    sup = dep.supervisor
+    try:
+        for c in dep.clients:
+            c.op_factory = lambda n: ("set", f"k{n % 3}", n)
+        # Fixed-duration fault phase: traffic spans the SIGKILL and the
+        # recovery whatever the machine's speed.
+        t.call_at(0.0, dep.start_clients)
+        # a0 is in the initial configuration (first 2f+1 of the pool).
+        t.call_at(1.0, lambda: t.crash("a0", clean=False))  # real SIGKILL
+        t.call_at(2.2, lambda: t.restart("a0"))  # re-spawn --recover
+        t.run(4.5)
+        log = sup.read_log("a0")
+        assert "recovered from" in log  # the re-spawn loaded the state file
+        # Completion phase: the cluster still serves (bounded, not timed).
+        _drain_more_commands(t, dep)
+        dep.shutdown()
+        _, violations = dep.gather()
+        assert not violations, violations
+        state = sup.read_state("a0")
+        assert state["persistent"]["votes"]
+    finally:
+        dep.shutdown()
+
+
+def test_detector_drives_failover_from_sigkilled_leader():
+    """ClusterController.attach_detector semantics across real process
+    boundaries: a parent-hosted heartbeat detector confirms the silence
+    of a SIGKILLed leader over consecutive probe rounds and promotes the
+    follower with a real takeover; clients then finish against the new
+    leader."""
+    spec = _smoke_spec(n_clients=2, max_commands=None)
+    t, dep = spec.deploy("proc", seed=2)
+    try:
+        detector = dep.attach_detector(
+            ping_interval=0.1, suspect_after=0.35, confirm_misses=2
+        )
+        for c in dep.clients:
+            c.op_factory = lambda n: ("set", f"k{n % 3}", n)
+        t.call_at(0.0, dep.start_clients)
+        t.call_at(1.0, lambda: t.crash("p0", clean=False))  # SIGKILL the leader
+        # Fault phase ends once the detector acted (generous cap).
+        t.run(20.0, until=lambda: bool(dep.failover_log))
+        assert dep.failover_log, "detector never drove a failover"
+        entry = dep.failover_log[0]
+        assert entry["suspected"] == "p0"
+        assert entry["new_leader"] == "p1"
+        assert dep.supervisor.leader_of(0) == "p1"
+        assert "proposer:0:p0" in detector.suspected
+        # Completion phase: progress against the NEW leader.
+        _drain_more_commands(t, dep)
+        dep.shutdown()
+        _, violations = dep.gather()
+        assert not violations, violations
+    finally:
+        dep.shutdown()
+
+
+# The tier-1 proc matrix: real SIGKILL/SIGTERM faults, shard failover
+# through a router process, and disk loss + peer re-sync.
+@pytest.mark.parametrize("seed", (0, 1, 2))
+@pytest.mark.parametrize(
+    "name",
+    ("leader_kill9_mid_phase2", "shard_leader_failover", "replica_disk_loss"),
+)
+def test_scenario_proc_quick(name, seed):
+    run_scenario(name, seed, transport="proc").raise_if_unsafe()
+
+
+def test_scenario_proc_pause_sigstop():
+    """The Pause fault as a real SIGSTOP/SIGCONT: the victim process is
+    wedged-but-connected across a reconfiguration and floods its backlog
+    on SIGCONT; safety holds."""
+    run_scenario("pause_during_reconfig", 0, transport="proc").raise_if_unsafe()
+
+
+@pytest.mark.parametrize("num_shards", (1, 2))
+def test_build_worker_node_matches_instantiate(num_shards, tmp_path):
+    """The proc plane constructs each role from the spec independently of
+    ClusterSpec.instantiate; this pins the two constructions together so
+    a topology-rule change in one place fails here instead of silently
+    deploying a different cluster per backend."""
+    from repro.core import Simulator
+    from repro.core.proc import build_worker_node, worker_addrs
+
+    spec = ClusterSpec(
+        f=1,
+        n_clients=1,
+        sm_factory=KVStoreSM,
+        num_shards=num_shards,
+        route_via_router=num_shards > 1,
+        options=Options(batch_max=4, batch_flush_interval=1e-3),
+        auto_elect_leader=False,
+    )
+    dep = spec.instantiate(Simulator(seed=0))
+    by_addr = {
+        n.addr: n
+        for n in (
+            dep.proposers
+            + dep.acceptors
+            + dep.matchmakers
+            + dep.standby_matchmakers
+            + dep.replicas
+            + [dep.mm_coordinator]
+            + ([dep.router] if dep.router else [])
+        )
+    }
+    for addr in worker_addrs(spec):
+        ref = by_addr[addr]
+        got = build_worker_node(spec, addr, tmp_path)
+        assert type(got) is type(ref), addr
+        # batch policy parity (None vs None, or same max/interval)
+        ref_b, got_b = getattr(ref, "batch", None), getattr(got, "batch", None)
+        assert (ref_b is None) == (got_b is None), addr
+        if ref_b is not None:
+            assert (ref_b.max_batch, ref_b.flush_interval) == (
+                got_b.max_batch,
+                got_b.flush_interval,
+            ), addr
+        for field in (
+            "matchmakers", "replicas", "proposers", "f", "shard",
+            "enabled", "peers", "leader_addrs", "ack_stride", "pid",
+        ):
+            if hasattr(ref, field):
+                assert getattr(got, field) == getattr(ref, field), (addr, field)
+        if hasattr(ref, "ownership"):
+            assert got.ownership.num_shards == ref.ownership.num_shards, addr
+        if hasattr(ref, "elog"):
+            assert got.elog.num_shards == ref.elog.num_shards, addr
+
+
+def test_fast_paxos_not_supported_on_proc():
+    with pytest.raises(ValueError):
+        run_scenario("fast_paxos_recovery", 0, transport="proc")
+    assert "fast_paxos_recovery" not in proc_scenario_names()
+    assert "shard_leader_failover" in proc_scenario_names()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", tuple(range(5)))
+@pytest.mark.parametrize("name", proc_scenario_names())
+def test_scenario_proc_soak(name, seed):
+    """The full scenario matrix over real OS processes (nightly tier)."""
+    run_scenario(name, seed, transport="proc").raise_if_unsafe()

@@ -84,11 +84,16 @@ def test_tcp_batches_ride_one_frame():
 
 @pytest.mark.parametrize(
     "name",
-    ("traffic_during_reconfig", "leader_kill9_mid_phase2", "shard_leader_failover"),
+    (
+        "traffic_during_reconfig",
+        "leader_kill9_mid_phase2",
+        "shard_leader_failover",
+        "pause_during_reconfig",
+    ),
 )
 def test_scenario_tcp_quick(name):
     """Nemesis scenarios (crash/restart, partitions via FaultPlane,
-    takeovers) run unchanged over real sockets."""
+    takeovers, SIGSTOP-modelled pauses) run unchanged over real sockets."""
     run_scenario(name, 0, transport="tcp").raise_if_unsafe()
 
 
