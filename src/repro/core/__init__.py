@@ -17,6 +17,8 @@ from .log import (
     shard_of_slot,
 )
 from .matchmaker import Matchmaker
+from . import mc
+from .mc import MCConfig, MCResult, explore
 from .mm_reconfig import MMReconfigCoordinator
 from .nemesis import (
     ClockSkew,
@@ -77,7 +79,8 @@ __all__ = [
     "ConfigChange", "Configuration", "Crash", "Deployment", "DiskLoss",
     "ExecutionLog", "FastAcceptor", "FastClient", "FastCoordinator",
     "FaultPlane", "Heal", "HorizontalProposer", "KVStoreSM",
-    "MMReconfigCoordinator", "Matchmaker", "NEG_INF", "Nemesis",
+    "MCConfig", "MCResult", "MMReconfigCoordinator", "Matchmaker", "NEG_INF",
+    "Nemesis",
     "NetworkConfig", "Node", "NoopSM", "Options", "Oracle", "Partition",
     "Pause", "PipelinedClient", "ProcDeployment", "ProcTransport",
     "ProtocolNode", "Proposer", "QuorumSpec",
@@ -86,7 +89,7 @@ __all__ = [
     "Shard", "ShardRouter", "Simulator", "SingleDecreeProposer",
     "SlotOwnership", "SlotState", "StateMachine", "Storm", "Supervisor",
     "TcpTransport", "Transport", "build", "check_invariants", "deploy_proc",
-    "initial_round", "make_transport", "max_round", "on",
+    "explore", "initial_round", "make_transport", "max_round", "mc", "on",
     "proc_scenario_names", "run_matrix", "run_proc_scenario", "run_scenario",
     "shard_of_command", "shard_of_slot", "shrink_failing_scenario",
     "shrink_schedule", "shrink_timing", "wire",

@@ -78,6 +78,27 @@ class MMReconfigCoordinator(Node):
         self._merged_shard_logs: Tuple[m.ShardLogSnapshot, ...] = ()
         self.stats = MMReconfigStats()
 
+    def mc_state(self) -> Dict[str, Any]:
+        """Model-checker fingerprint state (core/mc.py): the coordinator
+        is all volatile — its phase machine, ballot, gathered acks and the
+        merged log it will bootstrap from all steer future transitions."""
+        return {
+            "cid": self.cid,
+            "phase": self.phase,
+            "m_old": self.m_old,
+            "m_new": self.m_new,
+            "ballot": self.ballot,
+            "max_witnessed": self.max_witnessed,
+            "stop_acks": self._stop_acks,
+            "p1_acks": self._p1_acks,
+            "p2_acks": self._p2_acks,
+            "boot_acks": self._boot_acks,
+            "merged_log": self._merged_log,
+            "merged_w": self._merged_w,
+            "merged_shard_logs": self._merged_shard_logs,
+            "candidate": getattr(self, "_chosen_candidate", None),
+        }
+
     # ------------------------------------------------------------------
     def reconfigure(self, m_old: Tuple[Address, ...], m_new: Tuple[Address, ...]) -> None:
         assert self.phase == "idle", "one reconfiguration at a time"

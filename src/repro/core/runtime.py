@@ -238,6 +238,17 @@ class ProtocolNode:
     def on_restart(self) -> None:  # pragma: no cover - default no-op
         """Hook for re-arming timers after a restart."""
 
+    def mc_state(self) -> Dict[Any, Any]:
+        """The node state a model-checker fingerprint must capture: every
+        attribute that can influence the node's future behaviour (the
+        verification plane, core/mc.py).  Defaults to the role's durable
+        state; roles whose *volatile* state steers the protocol (a
+        proposer's phase, a coordinator's pending acks) override this to
+        include it.  Values must round-trip through the canonical value
+        codec (``wire.encode_canonical``)."""
+        ps = getattr(self, "persistent_state", None)
+        return ps() if callable(ps) else {}
+
     # -- dispatch ----------------------------------------------------------
     def on_message(self, src: Address, msg: Any) -> None:
         # Hot path: one dict probe per message, and Batch envelopes unwrap

@@ -75,6 +75,14 @@ class ScenarioFailure(AssertionError):
     """A scenario-harness failure; the message leads with the replay tuple."""
 
 
+# raise_if_unsafe auto-minimizes failing sim schedules through ddmin before
+# raising, so the assertion message carries both the full replay token and a
+# shrunken one.  The probe budget is deliberately small: this runs inside a
+# failing test, where dozens of re-runs are acceptable but hundreds are not.
+AUTO_SHRINK = True
+AUTO_SHRINK_PROBES = 40
+
+
 @dataclass
 class ScenarioResult:
     name: str
@@ -87,20 +95,40 @@ class ScenarioResult:
     completed_commands: int
     steady_throughput: float = 0.0   # cmds/sec before the first fault
     faulty_throughput: float = 0.0   # cmds/sec while the nemesis is active
+    schedule: Optional[Schedule] = None  # the schedule actually run
 
     @property
     def safe(self) -> bool:
         return not self.violations
 
-    def raise_if_unsafe(self) -> "ScenarioResult":
-        if self.violations:
-            raise ScenarioFailure(
-                f"REPLAY {self.replay}\n"
-                f"scenario {self.name!r} seed {self.seed} on {self.transport}: "
-                f"{len(self.violations)} invariant violation(s):\n  "
-                + "\n  ".join(self.violations)
-            )
-        return self
+    def raise_if_unsafe(self, shrink: Optional[bool] = None) -> "ScenarioResult":
+        if not self.violations:
+            return self
+        msg = (
+            f"REPLAY {self.replay}\n"
+            f"scenario {self.name!r} seed {self.seed} on {self.transport}: "
+            f"{len(self.violations)} invariant violation(s):\n  "
+            + "\n  ".join(self.violations)
+        )
+        if shrink is None:
+            shrink = AUTO_SHRINK and self.transport == "sim" and self.schedule is not None
+        if shrink and self.schedule is not None:
+            try:
+                small = shrink_schedule(
+                    self.schedule,
+                    lambda s: not run_scenario(
+                        self.name, self.seed, transport=self.transport, schedule=s
+                    ).safe,
+                    max_probes=AUTO_SHRINK_PROBES,
+                )
+                msg += (
+                    f"\nSHRUNK (ddmin, {len(small.events)}/"
+                    f"{len(self.schedule.events)} events): REPLAY "
+                    f"(seed={self.seed}, schedule={small!r})"
+                )
+            except Exception as exc:  # shrinking must never mask the failure
+                msg += f"\nSHRUNK: unavailable ({type(exc).__name__}: {exc})"
+        raise ScenarioFailure(msg)
 
 
 @dataclass
@@ -485,7 +513,7 @@ def run_scenario(
 
         return run_proc_scenario(name, seed, schedule=schedule)
     if name == "fast_paxos_recovery":
-        return _run_fast_paxos(seed, transport)
+        return _run_fast_paxos(seed, transport, schedule=schedule)
     sc = _BUILDERS[name](seed)
     if schedule is not None:
         sc = _Scenario(
@@ -528,6 +556,7 @@ def run_scenario(
         completed_commands=sum(len(c.latencies) for c in dep.clients),
         steady_throughput=steady,
         faulty_throughput=faulty,
+        schedule=sc.schedule,
     )
 
 
@@ -562,12 +591,15 @@ class _FastDeps:
         self.sim = sim
 
 
-def _run_fast_paxos(seed: int, transport: str) -> ScenarioResult:
+def _run_fast_paxos(
+    seed: int, transport: str, *, schedule: Optional[Schedule] = None
+) -> ScenarioResult:
     """Two clients race values into f+1 fast acceptors under an acceptor
     storm; the coordinator must recover conflicts into higher rounds and
     at most one value may ever be chosen (Algorithm 5)."""
     rng = _rng("fast_paxos_recovery", seed)
-    schedule = _fast_paxos_schedule(seed)
+    if schedule is None:
+        schedule = _fast_paxos_schedule(seed)
     net = NetworkConfig()
     t: Any = make_transport(transport, seed=seed, net=net)
 
@@ -634,6 +666,7 @@ def _run_fast_paxos(seed: int, transport: str) -> ScenarioResult:
         violations=violations,
         chosen_slots=len(oracle.chosen),
         completed_commands=1 if coord.chosen_value is not None else 0,
+        schedule=schedule,
     )
 
 

@@ -488,6 +488,90 @@ class Simulator:
             if events > max_events:
                 raise RuntimeError("event budget exhausted — livelock?")
 
+    # -- model-checking hooks (the verification plane, core/mc.py) ---------
+    # The explorer never calls step(): it picks pending events by their
+    # stable insertion seq and runs them out of heap order, which is what
+    # lets it enumerate every delivery/timer interleaving the asynchronous
+    # network model allows.  Seq ids come from the same deterministic
+    # counter as normal runs, so a (family build, choice prefix) pair
+    # always rebuilds the identical state — the fork-by-replay the
+    # explorer's backtracking is built on.
+    def pending_events(self) -> List[Tuple[int, Any]]:
+        """The enabled-event frontier: every live heap record as
+        ``(seq, record)`` in stable insertion order.  Stale timer records
+        — cancelled, or armed in a previous life of a since-crashed node
+        — are excluded (running them is a no-op by construction)."""
+        out = []
+        for _, seq, record in self._heap:
+            if type(record) is _TimerFire and (
+                record.timer.cancelled or record.node.life_epoch != record.epoch
+            ):
+                continue
+            out.append((seq, record))
+        out.sort()
+        return out
+
+    def run_event(self, seq: int) -> None:
+        """Run one specific pending event, out of heap order.  The clock
+        only ever moves forward (``max(now, when)``); relative event order
+        is entirely the caller's choice."""
+        when, record = self._take_event(seq)
+        if when > self.now:
+            self.now = when
+        record.run(self)
+
+    def discard_event(self, seq: int) -> None:
+        """Remove a pending delivery: the network lost this message."""
+        self._take_event(seq)
+        self.messages_dropped += 1
+
+    def duplicate_event(self, seq: int) -> int:
+        """Enqueue a copy of a pending delivery (the network duplicated
+        it); returns the copy's seq.  The copy draws the next seq from the
+        deterministic counter, so replays allocate identically."""
+        for when, s, record in self._heap:
+            if s == seq:
+                assert type(record) is _Delivery, "only deliveries duplicate"
+                new_seq = next(self._seq)
+                heapq.heappush(
+                    self._heap,
+                    (when, new_seq, _Delivery(record.src, record.dst, record.msg)),
+                )
+                return new_seq
+        raise KeyError(f"no pending event #{seq}")
+
+    def _take_event(self, seq: int) -> Tuple[float, Any]:
+        for i, (when, s, record) in enumerate(self._heap):
+            if s == seq:
+                last = self._heap.pop()
+                if i < len(self._heap):
+                    self._heap[i] = last
+                    heapq.heapify(self._heap)
+                return when, record
+        raise KeyError(f"no pending event #{seq}")
+
+
+def event_kind(record: Any) -> str:
+    """Classify a heap record: deliver | frame | timer | call."""
+    t = type(record)
+    if t is _Delivery:
+        return "deliver"
+    if t is _Frame:
+        return "frame"
+    if t is _TimerFire:
+        return "timer"
+    return "call"
+
+
+def event_target(record: Any) -> Optional[Address]:
+    """The node a heap record touches when run (None = global callback)."""
+    t = type(record)
+    if t is _Delivery or t is _Frame:
+        return record.dst
+    if t is _TimerFire:
+        return record.node.addr
+    return None
+
 
 # FaultPlane.on_send returns a fresh [0.0] for undisturbed sends; this
 # module-level constant is only the no-faults default in Simulator.send.

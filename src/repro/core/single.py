@@ -79,6 +79,30 @@ class SingleDecreeProposer(Node):
     def chosen_value(self) -> Any:
         return self.cmdlog.chosen_values.get(SLOT)
 
+    def mc_state(self) -> Dict[str, Any]:
+        """Model-checker fingerprint state (core/mc.py): the proposer is
+        all volatile, so everything that steers a future transition goes
+        in — phase, round, gathered acks, the Phase-1 fold (k, kv, prune
+        floor) and the learned value.  Telemetry stays out."""
+        return {
+            "pid": self.pid,
+            "matchmakers": self.matchmakers,
+            "value": self.value,
+            "round": self.round,
+            "config": self.config,
+            "history": self.history,
+            "attempt": self.attempt,
+            "max_witnessed": self.max_witnessed,
+            "match_acks": self._match_acks,
+            "p1_acks": self._p1_acks,
+            "p2_acks": self._p2_acks,
+            "k": self._k,
+            "kv": self._kv,
+            "prune_floor": self._prune_floor,
+            "phase": self._phase,
+            "chosen": self.cmdlog.chosen_values,
+        }
+
     # ------------------------------------------------------------------
     def propose(self, value: Any) -> None:
         """Client entry point (Algorithm 3 line 1)."""

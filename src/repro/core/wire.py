@@ -1052,6 +1052,64 @@ def decode_value(data: bytes) -> Any:
     return _r_value(_Reader(data))
 
 
+# -- canonical fingerprint encoding (the verification plane, core/mc.py) ----
+_V_WIREMSG = 0x11  # encode-only: a registered wire message, embedded by bytes
+
+
+def encode_canonical(v: Any) -> bytes:
+    """Canonical value encoding for model-checker state fingerprints.
+
+    Like :func:`encode_value` but with all ordering history erased: dict
+    items are written sorted by the canonical encoding of their key
+    (``_w_value`` keeps insertion order, so two runs that built the same
+    mapping in different orders would otherwise hash apart), sets and
+    frozensets are sorted the same way (``_w_value`` sorts by ``repr``,
+    which is stable but not canonical for nested containers), and any
+    registered wire message embeds as its :func:`encode` bytes.  This is
+    encode-only — tag ``0x11`` has no reader; fingerprints are hashed,
+    never decoded.
+    """
+    w = _Writer()
+    _w_canon(w, v)
+    return w.bytes_value()
+
+
+def _canon_sort_key(v: Any) -> bytes:
+    # A fresh writer per key: no interning shared with the enclosing
+    # frame, so the sort key is a self-contained byte string.
+    w = _Writer()
+    _w_canon(w, v)
+    return w.bytes_value()
+
+
+def _w_canon(w: _Writer, v: Any) -> None:
+    t = type(v)
+    if t is dict:
+        w.out.append(bytes((_V_DICT,)))
+        _w_uvarint(w.out, len(v))
+        for _, k, x in sorted(
+            ((_canon_sort_key(k), k, x) for k, x in v.items()),
+            key=lambda e: e[0],
+        ):
+            _w_canon(w, k)
+            _w_canon(w, x)
+    elif t is set or t is frozenset:
+        w.out.append(bytes((_V_SET if t is set else _V_FROZENSET,)))
+        _w_uvarint(w.out, len(v))
+        for x in sorted(v, key=_canon_sort_key):
+            _w_canon(w, x)
+    elif t is tuple or t is list:
+        w.out.append(bytes((_V_TUPLE if t is tuple else _V_LIST,)))
+        _w_uvarint(w.out, len(v))
+        for x in v:
+            _w_canon(w, x)
+    elif t in _ENCODERS:
+        w.out.append(bytes((_V_WIREMSG,)))
+        _w_bytes(w, encode(v))
+    else:
+        _w_value(w, v)
+
+
 # On-disk node state (the proc plane's per-node state files).  Same
 # version byte as the wire: [magic "MP"][u8 version][value-encoded obj].
 _STATE_MAGIC = b"MP"

@@ -1,0 +1,304 @@
+"""Verification plane: the bounded model checker (core/mc.py).
+
+Covers the tier-1 acceptance bar: exhaustive exploration of the 3-node
+single-decree family with a crash/restart fault budget, the mutation
+self-test (a deliberately broken proposer caught with a replayable,
+ddmin-shrunk counterexample), DPOR state reduction, and fingerprint
+stability/sensitivity.
+"""
+
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mc
+from repro.core.mc import MCConfig
+from repro.core.nemesis import Crash, Event, Restart, Schedule
+
+
+# --------------------------------------------------------------------------
+# Exhaustive exploration (the tier-1 acceptance bar)
+# --------------------------------------------------------------------------
+def test_single_decree_exhaustive_no_faults():
+    res = mc.explore("single_decree", MCConfig(max_depth=30, fault_budget=0))
+    assert res.complete, "frontier must be exhausted within bounds"
+    assert not res.found, res.violation
+    assert res.terminals > 0
+    assert res.states > 0
+
+
+def test_single_decree_exhaustive_with_crash_budget():
+    """The acceptance criterion: every interleaving of the 3-node
+    single-decree family with up to two crash/restart faults is safe."""
+    res = mc.explore(
+        "single_decree",
+        MCConfig(max_depth=30, fault_budget=2, faults=("crash", "restart")),
+    )
+    assert res.complete, "crash-budget exploration must exhaust"
+    assert not res.found, res.violation
+    # Faults genuinely widen the space beyond the fault-free run.
+    base = mc.explore("single_decree", MCConfig(max_depth=30, fault_budget=0))
+    assert res.states > base.states
+
+
+def test_mm_reconfig_bounded_safe():
+    """Bounded (depth-cut) exploration of a proposer racing a Section-6
+    matchmaker reconfiguration, including the handover-completeness check."""
+    res = mc.explore(
+        "mm_reconfig",
+        MCConfig(max_depth=12, max_states=50_000, fault_budget=0, timer_budget=1),
+    )
+    assert not res.found, res.violation
+    assert res.states > 500  # the race is genuinely explored
+
+
+# --------------------------------------------------------------------------
+# DPOR + fingerprint reduction
+# --------------------------------------------------------------------------
+def test_dpor_reduces_state_count():
+    bounds = dict(max_depth=30, fault_budget=0, shrink=False)
+    naive = mc.explore(
+        "single_decree", MCConfig(dpor=False, fingerprints=False, **bounds)
+    )
+    reduced = mc.explore("single_decree", MCConfig(**bounds))
+    assert naive.complete and reduced.complete
+    assert not naive.found and not reduced.found
+    assert reduced.states < naive.states, (reduced.states, naive.states)
+    assert naive.states / reduced.states > 1.5
+    # Both strategies agree on the reachable terminals' safety, and the
+    # reduced run actually exercised both pruning mechanisms.
+    assert reduced.sleep_skipped > 0
+    assert reduced.fingerprint_hits > 0
+
+
+def test_reduction_is_sound_for_the_mutant():
+    """Pruning must not hide the bug: the mutant is caught with and
+    without DPOR/fingerprints."""
+    for dpor, fp in ((True, True), (False, False)):
+        res = mc.explore(
+            "single_decree_mutated",
+            MCConfig(max_depth=30, fault_budget=0, dpor=dpor, fingerprints=fp, shrink=False),
+        )
+        assert res.found, f"mutant escaped with dpor={dpor} fingerprints={fp}"
+
+
+# --------------------------------------------------------------------------
+# Mutation self-test: counterexample, replay, shrink
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mutant_result():
+    return mc.explore("single_decree_mutated", MCConfig(max_depth=30, fault_budget=0))
+
+
+def test_mutant_caught_within_tier1_bounds(mutant_result):
+    res = mutant_result
+    assert res.found
+    assert any("chosen" in v for v in res.violation)
+    assert res.counterexample is not None
+    assert res.replay_line() is not None
+    # One line: the schedule repr must not contain newlines.
+    assert "\n" not in res.replay_line()
+
+
+def test_counterexample_replays_deterministically(mutant_result):
+    ce = mutant_result.counterexample
+    r1 = mc.replay("single_decree_mutated", ce)
+    r2 = mc.replay("single_decree_mutated", ce)
+    assert r1.violations and r1.violations == r2.violations
+    assert r1.event_log == r2.event_log
+    assert r1.skipped == 0
+
+
+def test_counterexample_does_not_fail_correct_family(mutant_result):
+    """The same schedule against the unmutated family is safe — the bug
+    is in the mutant, not the harness."""
+    r = mc.replay("single_decree", mutant_result.counterexample)
+    assert r.safe, r.violations
+
+
+def test_shrunk_counterexample_still_fails_and_is_stable(mutant_result):
+    res = mutant_result
+    assert res.shrunk is not None
+    assert len(res.shrunk.events) <= len(res.counterexample.events)
+    rr = mc.replay("single_decree_mutated", res.shrunk)
+    assert rr.violations, "shrunken schedule must still reproduce the bug"
+    # ddmin is deterministic: shrinking the shrunken schedule is a no-op.
+    again = mc.shrink_counterexample("single_decree_mutated", res.shrunk)
+    assert again == res.shrunk
+
+
+def test_replay_skips_inapplicable_events():
+    """ddmin probes may reference events a truncated prefix never creates;
+    replay must skip them (and the probe then reads as not-failing)."""
+    sched = Schedule(
+        name="mc:test",
+        seed=0,
+        events=(
+            Event(at=0.0, fault=mc.Fire(seq=999)),  # never allocated
+            Event(at=1.0, fault=Crash(addr="nope")),  # unknown node
+            Event(at=2.0, fault=Restart(addr="p0")),  # p0 is not failed
+        ),
+    )
+    r = mc.replay("single_decree", sched)
+    assert r.applied == 0
+    assert r.skipped == 3
+    assert r.safe
+
+
+def test_fault_schedules_replay():
+    """Crash/restart events round-trip through replay on the MC families."""
+    sched = Schedule(
+        name="mc:test",
+        seed=0,
+        events=(
+            Event(at=0.0, fault=mc.Fire(seq=0)),
+            Event(at=1.0, fault=Crash(addr="p1")),
+            Event(at=2.0, fault=mc.Fire(seq=2)),
+            Event(at=3.0, fault=Restart(addr="p1")),
+        ),
+    )
+    r = mc.replay("single_decree", sched)
+    assert r.applied == 4
+    assert r.skipped == 0
+    assert r.safe
+
+
+# --------------------------------------------------------------------------
+# Fingerprint stability and sensitivity
+# --------------------------------------------------------------------------
+def _baseline_trace(family="single_decree", limit=8):
+    """A deterministic fire-only trace: always run the lowest pending seq."""
+    sys = mc.FAMILIES[family].build()
+    trace = []
+    while len(trace) < limit:
+        pend = sys.sim.pending_events()
+        if not pend:
+            break
+        seq, _ = pend[0]
+        trace.append(seq)
+        sys.sim.run_event(seq)
+    return tuple(trace)
+
+
+def _fingerprint_after(family, seqs):
+    """Apply `seqs` in order to a fresh build; None if any is unavailable
+    at its turn (the interleaving is not causally legal)."""
+    sys = mc.FAMILIES[family].build()
+    for s in seqs:
+        if s not in {q for q, _ in sys.sim.pending_events()}:
+            return None
+        sys.sim.run_event(s)
+    return mc.fingerprint(sys)
+
+
+def _targets(family, seqs):
+    """seq -> delivery target, observed along the baseline replay."""
+    from repro.core.sim import event_target
+
+    sys = mc.FAMILIES[family].build()
+    out = {}
+    for s in seqs:
+        for q, rec in sys.sim.pending_events():
+            out.setdefault(q, event_target(rec))
+        sys.sim.run_event(s)
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_fingerprint_invariant_under_commuting_permutations(data):
+    """The DPOR soundness assumption, tested directly: two adjacent trace
+    events that target *different* nodes (and are both enabled in either
+    order) must land on the identical state fingerprint when swapped.
+
+    Only the prefix up to the swapped pair is compared — seq ids of
+    events *created after* the pair depend on creation order, so a fixed
+    tail of seqs would name different messages in the two branches (DPOR
+    itself never does this: sleep sets only carry coenabled choices)."""
+    base = _baseline_trace()
+    assert len(base) >= 2
+    tgt = _targets("single_decree", base)
+    i = data.draw(st.integers(min_value=0, max_value=len(base) - 2))
+    if tgt[base[i]] == tgt[base[i + 1]]:
+        return  # same node: dependent, order may matter
+    prefix = list(base[: i + 2])
+    swapped = list(prefix)
+    swapped[i], swapped[i + 1] = swapped[i + 1], swapped[i]
+    want = _fingerprint_after("single_decree", prefix)
+    got = _fingerprint_after("single_decree", swapped)
+    assert want is not None
+    if got is None:
+        return  # causally ordered despite distinct targets (not coenabled)
+    assert got == want, f"commuting swap at {i} changed fingerprint: {base}"
+
+
+def test_fingerprint_stable_across_rebuilds():
+    base = _baseline_trace()
+    assert _fingerprint_after("single_decree", base) == _fingerprint_after(
+        "single_decree", base
+    )
+
+
+def test_fingerprint_sensitive_to_persistent_state():
+    base = _baseline_trace(limit=4)
+    a = mc.FAMILIES["single_decree"].build()
+    b = mc.FAMILIES["single_decree"].build()
+    for s in base:
+        a.sim.run_event(s)
+        b.sim.run_event(s)
+    assert mc.fingerprint(a) == mc.fingerprint(b)
+    # Perturb one acceptor's durable state: fingerprints must diverge.
+    b.sim.nodes["n0"].chosen_watermark = 123
+    assert mc.fingerprint(a) != mc.fingerprint(b)
+
+
+def test_fingerprint_sensitive_to_liveness_flags_and_budgets():
+    a = mc.FAMILIES["single_decree"].build()
+    b = mc.FAMILIES["single_decree"].build()
+    assert mc.fingerprint(a) == mc.fingerprint(b)
+    assert mc.fingerprint(a, faults_left=1) != mc.fingerprint(a, faults_left=0)
+    b.sim.crash("p1")
+    assert mc.fingerprint(a) != mc.fingerprint(b)
+
+
+def test_fingerprint_ignores_time():
+    """Delivery timestamps are excluded: advancing the clock between
+    identical logical states must not change the hash."""
+    a = mc.FAMILIES["single_decree"].build()
+    b = mc.FAMILIES["single_decree"].build()
+    b.sim.now += 17.5
+    assert mc.fingerprint(a) == mc.fingerprint(b)
+
+
+# --------------------------------------------------------------------------
+# Explorer plumbing
+# --------------------------------------------------------------------------
+def test_unknown_family_raises():
+    with pytest.raises(KeyError):
+        mc.explore("no_such_family", MCConfig())
+
+
+def test_bounds_recorded_in_result():
+    res = mc.explore(
+        "single_decree", MCConfig(max_depth=5, fault_budget=0, shrink=False)
+    )
+    assert res.bounds["max_depth"] == 5
+    assert res.bounds["dpor"] is True
+    j = res.to_json()
+    assert j["bounds"]["max_depth"] == 5
+    assert j["states"] == res.states
+
+
+def test_depth_cutoff_marks_incomplete():
+    res = mc.explore(
+        "single_decree", MCConfig(max_depth=3, fault_budget=0, shrink=False)
+    )
+    assert not res.complete
+    assert res.depth_cutoffs > 0
+
+
+def test_presets_exist():
+    assert "quick" in mc.PRESETS and "deep" in mc.PRESETS
+    assert mc.PRESETS["deep"].max_depth >= mc.PRESETS["quick"].max_depth

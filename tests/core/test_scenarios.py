@@ -113,12 +113,45 @@ def test_failure_message_carries_replay_tuple():
     res = run_scenario("leader_kill9_mid_phase2", 0, transport="sim")
     res.violations = ["synthetic violation for the error-path test"]
     with pytest.raises(ScenarioFailure) as exc:
-        res.raise_if_unsafe()
+        res.raise_if_unsafe(shrink=False)  # shrink path tested separately
     msg = str(exc.value)
     assert msg.startswith("REPLAY (seed=0, schedule=Schedule(")
     assert "leader_kill9_mid_phase2" in msg
     # the replay token round-trips: it names the exact schedule value
     assert repr(build_schedule("leader_kill9_mid_phase2", 0)) in msg
+
+
+def test_failure_message_carries_shrunken_schedule(monkeypatch):
+    """raise_if_unsafe auto-minimizes the failing schedule through ddmin
+    and appends the shrunken replay line to the assertion message."""
+    import repro.core.scenarios as scen
+
+    res = run_scenario("leader_kill9_mid_phase2", 0, transport="sim")
+    res.violations = ["synthetic violation for the shrink-path test"]
+    full = res.schedule
+    assert full is not None and len(full.events) > 1
+
+    # Deterministic fake predicate: the failure needs exactly the Crash
+    # events.  ddmin must strip everything else and keep those.
+    from repro.core.nemesis import Crash
+
+    def fake_run(name, seed, *, transport="sim", schedule=None):
+        s = schedule if schedule is not None else full
+        fails = any(isinstance(e.fault, Crash) for e in s.events)
+        return scen.ScenarioResult(
+            name=name, seed=seed, transport=transport, replay="(fake)",
+            event_log=[], violations=["fake"] if fails else [],
+            chosen_slots=0, completed_commands=0, schedule=s,
+        )
+
+    monkeypatch.setattr(scen, "run_scenario", fake_run)
+    with pytest.raises(ScenarioFailure) as exc:
+        res.raise_if_unsafe()  # default: auto-shrink on sim transport
+    msg = str(exc.value)
+    assert "REPLAY (seed=0, schedule=Schedule(" in msg
+    assert "SHRUNK (ddmin, " in msg
+    n_crash = sum(isinstance(e.fault, Crash) for e in full.events)
+    assert f"SHRUNK (ddmin, {n_crash}/{len(full.events)} events)" in msg
 
 
 def test_throughput_fields_populated():
