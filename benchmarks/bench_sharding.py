@@ -13,23 +13,44 @@ This benchmark sweeps shard count at a fixed hot-path batch size
 (16, the bench_batching anchor) with pipelined clients routing
 client-side (``shard_of_command``), and reports the throughput curve.
 
-Wire plane (PR 4): the egress model now includes frame coalescing
+Shard-scaling overhaul (this PR): the historical curve INVERTED above 2
+shards (1 -> 876k, 2 -> 1.25M, 4 -> 1.11M, 8 -> 584k cmds/s; kept below
+as ``PRE_FIX_CURVE``).  Three compounding causes, three fixes:
+
+  * **Ack fan-out** — every replica ack broadcast to all ``2*S`` shard
+    proposers, O(S) replica egress per stride.  Fixed by rotating each
+    ack stride to ONE shard's proposer group (``Replica.leader_groups``)
+    with a fill-tick full broadcast for convergence.
+  * **Batch fragmentation** — per-seq round-robin routing split every
+    pipelined 16-burst into 1/S-sized crumbs across all leaders, so no
+    leader could fill a wire batch without a flush-interval wait.  Fixed
+    by affinity-run routing (``shard_of_command(..., run=batch_max)``):
+    each client's bursts land on one shard per run, filling whole
+    batches, while runs still cycle every shard for balance.
+  * **Pipeline depth** — with the egress ceiling lifted ~4x, 1k inflight
+    commands stopped being "deep": the sweep was measuring Little's law
+    (inflight / latency), not the egress ceiling it exists to compare.
+    The client window is now deep enough (8 clients x 2048) that 1-4
+    shards pin at their egress ceilings and 8 shards still shows gain.
+
+Wire plane (PR 4): the egress model includes frame coalescing
 (``NetworkConfig.egress_coalescing``) — messages queued behind an
 in-progress frame to the same destination ride that frame for the
-codec's marginal sub-message cost instead of a full per-frame overhead,
-the ``writev`` effect every real socket transport gets for free.  The
-marginal-cost fraction is grounded by the codec micro-benchmark
-(``bench_wire.py`` -> BENCH_wire.json, ``coalescing_cost_model``).  A
-``pre_wire_plane`` reference point (coalescing off, the PR-3 model) is
+codec's marginal sub-message cost instead of a full per-frame overhead.
+A ``pre_wire_plane`` reference point (coalescing off, the PR-3 model) is
 recorded alongside the curve so the wire-plane speedup stays a checked
 number.
 
-Acceptance anchors: the wire-plane 4-shard point >= 1.5x the
-pre-wire-plane 4-shard baseline (458k cmds/s, the PR-3 record), and on
-the pre-wire-plane model 4 shards >= 2x 1 shard at batch 16 (the PR-3
-anchor, still checked on the model it was defined on — coalescing lifts
-the single leader's egress ceiling, so shard scaling under the wire
-plane is structurally flatter and is reported, not asserted).
+``bench_relay`` micro-benchmarks the router's zero-copy SealedBatch
+relay (slice already-encoded sub-frames per shard leader) against the
+decode -> re-dispatch -> re-encode baseline, asserting the onward bytes
+are identical.
+
+Acceptance anchors: the post-fix curve is monotone — 4 shards >= 1.15x
+2 shards and 8 shards >= 4 shards (asserted on the full sweep; the CI
+``--smoke`` sweep asserts 4 >= 2) — and on the pre-wire-plane model
+4 shards >= 2x 1 shard at batch 16 (the PR-3 anchor, still checked on
+the model it was defined on).
 
 Emits ``BENCH_sharding.json``.  ``--smoke`` runs a shortened sweep (CI).
 """
@@ -39,10 +60,13 @@ from __future__ import annotations
 import json
 import os
 import sys
-from typing import Dict, List
+import time
+from typing import Any, Dict, List
 
 from repro.core import ClusterSpec, NetworkConfig, PipelinedClient, Simulator
-from repro.core.client import shard_of_command
+from repro.core import messages as m
+from repro.core import wire
+from repro.core.client import ShardRouter, shard_of_command
 from repro.core.deploy import Deployment
 from repro.core.proposer import Options
 
@@ -50,13 +74,30 @@ from . import common
 
 SHARD_COUNTS = (1, 2, 4, 8)
 BATCH_MAX = 16
+# Affinity-run routing: each client's bursts advance shards in runs of a
+# full wire batch, so a burst fills ONE leader's batch instead of
+# fragmenting across every leader (see shard_of_command).
+AFFINITY_RUN = BATCH_MAX
 # The pipeline must be deep enough that throughput is egress-bound, not
-# latency-bound: with ~1024 commands in flight the single leader pins at
-# its serialization ceiling and extra shards buy real throughput.
+# latency-bound: the sweep compares per-shard-count egress ceilings, so
+# every point needs enough inflight commands to saturate its leaders.
+# 8 x 2048 = 16k inflight holds through 8 shards post-overhaul (at the
+# historical 8 x 128 the 4- and 8-shard points measured only Little's
+# law: inflight / interleave-latency).
 N_CLIENTS = 8
-WINDOW = 128
+WINDOW = 2048
 PER_MSG_OVERHEAD = 20e-6  # sender-side serialization cost per wire message
 FLUSH_INTERVAL = 600e-6
+
+# The measured regression this PR fixed (seed commit, window=128,
+# per-seq round-robin routing, broadcast acks) — kept in the JSON so the
+# trajectory stays visible next to the post-fix curve.
+PRE_FIX_CURVE = [
+    {"num_shards": 1, "commands_per_sec": 876070.0},
+    {"num_shards": 2, "commands_per_sec": 1250960.0},
+    {"num_shards": 4, "commands_per_sec": 1110970.0},
+    {"num_shards": 8, "commands_per_sec": 583630.0},
+]
 
 
 def run_one(
@@ -69,7 +110,8 @@ def run_one(
     window: int = WINDOW,
     overhead: float = PER_MSG_OVERHEAD,
     egress_coalescing: bool = True,
-) -> Dict[str, float]:
+    affinity_run: int = AFFINITY_RUN,
+) -> Dict[str, Any]:
     opts = Options(batch_max=batch_max, batch_flush_interval=FLUSH_INTERVAL)
     spec = ClusterSpec(
         f=1,
@@ -77,6 +119,7 @@ def run_one(
         options=opts,
         num_shards=num_shards,
         auto_elect_leader=True,
+        shard_affinity_run=affinity_run,
     )
     sim = Simulator(
         seed=seed,
@@ -88,7 +131,9 @@ def run_one(
     sim.run_for(0.01)
 
     def route_for(cid):
-        return dep.shard_leader(shard_of_command(cid, num_shards)).addr
+        return dep.shard_leader(
+            shard_of_command(cid, num_shards, affinity_run)
+        ).addr
 
     clients = []
     for i in range(n_clients):
@@ -113,7 +158,8 @@ def run_one(
 
     completed = sum(c.completed for c in clients)
     lat = Deployment.summary([l for c in clients for (_, l) in c.latencies])
-    backlog = max(r.elog.backlog() for r in dep.replicas)
+    tel = dep.shard_telemetry()
+    backlog = max(r["backlog"] for r in tel["replicas"].values())
     return {
         "num_shards": num_shards,
         "commands_per_sec": completed / duration,
@@ -124,20 +170,118 @@ def run_one(
         "median_latency_ms": lat["median"] * 1e3,
         "iqr_latency_ms": lat["iqr"] * 1e3,
         "replica_backlog_end": backlog,
+        "replica_acks_sent": sum(r["acks_sent"] for r in tel["replicas"].values()),
+        "max_cursor_lag": max(
+            (max(r["cursor_lag"].values(), default=0) for r in tel["replicas"].values()),
+            default=0,
+        ),
+        "shard_telemetry": tel,
     }
 
 
-def main(fast: bool = True, smoke: bool = False) -> List[Dict[str, float]]:
+# --------------------------------------------------------------------------
+# Router relay micro-benchmark: zero-copy slice vs decode/re-encode
+# --------------------------------------------------------------------------
+def _relay_envelopes(n: int, batch: int, n_clients: int = 8) -> List[bytes]:
+    """Encoded SealedBatch ingress frames, the relay's wire-level input."""
+    out = []
+    seqs = [0] * n_clients
+    for i in range(n):
+        msgs = []
+        for k in range(batch):
+            c = (i + k) % n_clients
+            seqs[c] += 1
+            cmd = m.Command(cmd_id=(f"c{c}", seqs[c]), op=b"\x00")
+            msgs.append(m.ClientRequest(command=cmd))
+        out.append(wire.encode(m.SealedBatch(messages=tuple(msgs))))
+    return out
+
+
+def bench_relay(
+    n_envelopes: int = 1500, batch: int = BATCH_MAX, num_shards: int = 4
+) -> Dict[str, float]:
+    """Wall-clock the ShardRouter's byte path against the baseline it
+    replaced.  Both paths start from the received envelope bytes and end
+    at encoded onward frames (what a byte transport transmits); the
+    outputs are asserted byte-identical before timing is reported."""
+    blobs = _relay_envelopes(n_envelopes, batch)
+    providers = [lambda s=s: f"s{s}p0" for s in range(num_shards)]
+
+    def zero_copy(blob: bytes) -> List[bytes]:
+        router = ShardRouter("router", providers, affinity_run=AFFINITY_RUN)
+        sent: List[bytes] = []
+        router.send = lambda dst, fwd: sent.append(wire.encode(fwd))
+        router._on_sealed("ingress", wire.decode(blob))
+        return sent
+
+    def baseline(blob: bytes) -> List[bytes]:
+        # decode -> re-dispatch -> re-encode: every sub-frame decoded,
+        # grouped per leader, and re-serialized from message objects.
+        groups: Dict[str, List[Any]] = {}
+        for msg in wire.decode(blob).messages:
+            s = shard_of_command(msg.command.cmd_id, num_shards, AFFINITY_RUN)
+            groups.setdefault(providers[s](), []).append(msg)
+        return [
+            wire.encode(m.SealedBatch(messages=tuple(g))) for g in groups.values()
+        ]
+
+    # Equivalence first: the fast path must emit the baseline's bytes.
+    for blob in blobs[:50]:
+        assert sorted(zero_copy(blob)) == sorted(baseline(blob))
+
+    t0 = time.perf_counter()
+    for blob in blobs:
+        zero_copy(blob)
+    fast_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for blob in blobs:
+        baseline(blob)
+    base_s = time.perf_counter() - t0
+
+    frames = n_envelopes * batch
+    return {
+        "envelopes": n_envelopes,
+        "batch": batch,
+        "num_shards": num_shards,
+        "relay_frames_per_sec": frames / fast_s,
+        "baseline_frames_per_sec": frames / base_s,
+        "relay_speedup": base_s / fast_s,
+    }
+
+
+def main(fast: bool = True, smoke: bool = False) -> List[Dict[str, Any]]:
     duration = 0.06 if smoke else (common.t(1.0) if not fast else 0.1)
-    shard_counts = (1, 4) if smoke else SHARD_COUNTS
+    shard_counts = (1, 2, 4) if smoke else SHARD_COUNTS
     curve = []
     for s in shard_counts:
         row = run_one(s, duration=duration)
         curve.append(row)
-        common.record("sharding", **row)
+        common.record(
+            "sharding", **{k: v for k, v in row.items() if not isinstance(v, dict)}
+        )
     base = curve[0]["commands_per_sec"]
     for row in curve:
         row["speedup_vs_1shard"] = row["commands_per_sec"] / base if base else 0.0
+
+    by_shards = {row["num_shards"]: row["commands_per_sec"] for row in curve}
+    # The shard-scaling acceptance gate: the curve must be monotone.  CI's
+    # bench-smoke job runs --smoke, so a reintroduced 4-shard regression
+    # fails the workflow step right here.
+    assert by_shards[4] >= by_shards[2], (
+        f"4-shard regression: {by_shards[4]:.0f} < {by_shards[2]:.0f} cmds/s"
+    )
+    if not smoke:
+        assert by_shards[4] >= 1.15 * by_shards[2], (
+            f"4-shard point below the 1.15x bar: "
+            f"{by_shards[4]:.0f} < 1.15 * {by_shards[2]:.0f} cmds/s"
+        )
+        assert by_shards[8] >= by_shards[4], (
+            f"8-shard regression: {by_shards[8]:.0f} < {by_shards[4]:.0f} cmds/s"
+        )
+
+    relay = bench_relay(n_envelopes=300 if smoke else 1500)
+    common.record("router_relay", **relay)
+
     # The pre-wire-plane reference (PR-3 egress model: one frame per wire
     # message, no coalescing) at 1 and 4 shards: the 4-shard point is the
     # wire-plane speedup baseline, the pair carries the PR-3 2x shard-
@@ -146,7 +290,10 @@ def main(fast: bool = True, smoke: bool = False) -> List[Dict[str, float]]:
         run_one(s, duration=duration, egress_coalescing=False) for s in (1, 4)
     ]
     for row in pre_curve:
-        common.record("sharding_pre_wire_plane", **row)
+        common.record(
+            "sharding_pre_wire_plane",
+            **{k: v for k, v in row.items() if not isinstance(v, dict)},
+        )
     pre = pre_curve[-1]
     pre_scaling = (
         pre["commands_per_sec"] / pre_curve[0]["commands_per_sec"]
@@ -167,12 +314,15 @@ def main(fast: bool = True, smoke: bool = False) -> List[Dict[str, float]]:
                     "clients": N_CLIENTS,
                     "window": WINDOW,
                     "batch_max": BATCH_MAX,
+                    "affinity_run": AFFINITY_RUN,
                     "per_msg_overhead_s": PER_MSG_OVERHEAD,
                     "flush_interval_s": FLUSH_INTERVAL,
                     "duration_s": duration,
                     "egress_coalescing": True,
                 },
                 "curve": curve,
+                "pre_fix_curve": PRE_FIX_CURVE,
+                "router_relay": relay,
                 "pre_wire_plane_curve": pre_curve,
                 "pre_wire_plane_speedup_4shard_vs_1shard": pre_scaling,
                 "wire_plane_speedup_4shard": wire_speedup,

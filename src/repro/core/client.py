@@ -23,17 +23,31 @@ from .runtime import on
 from .sim import Address, Node
 
 
-def shard_of_command(cmd_id: Tuple[str, int], num_shards: int) -> int:
+def shard_of_command(
+    cmd_id: Tuple[str, int], num_shards: int, run: int = 1
+) -> int:
     """Deterministic shard assignment for a command.
 
     Stable across processes (no builtin ``hash``) and balanced per client:
     consecutive sequence numbers from one client round-robin the shards,
     which keeps the interleaved slot streams dense — the replica executes
     in global slot order, so balance is what keeps the pipeline full.
+
+    ``run > 1`` is the opt-in *affinity-run* variant: each client's
+    sequence numbers advance shards in runs of ``run`` consecutive
+    commands, so a pipelined client's burst of ``run`` requests lands on
+    ONE shard leader and coalesces into one full wire batch instead of
+    fragmenting ``1/num_shards``-sized crumbs across every leader (the
+    4-shard batch-fragmentation regression).  Long-term balance is
+    unchanged — runs still cycle all shards — and every caller that maps
+    a cmd_id must agree on ``run`` (deployment route closures, the
+    router, retries all hash the same id to the same shard).
     """
     if num_shards <= 1:
         return 0
     client, seq = cmd_id
+    if run > 1:
+        seq //= run
     return (zlib.crc32(str(client).encode()) + seq) % num_shards
 
 
@@ -52,6 +66,17 @@ class ShardRouter(Node):
     leader's ingress becomes one wire frame per coalesced burst.  Node-
     level batching is per destination, so commands for different shards
     never share a frame.
+
+    Zero-copy relay (the shard-scaling overhaul): clients that batch
+    their requests into ``messages.SealedBatch`` envelopes hit the
+    ``_on_sealed`` handler, which regroups *sub-frames* per shard leader
+    and forwards them as new SealedBatch envelopes.  On byte transports
+    the onward frames are slices of the received bytes (the sub-frames
+    are self-contained, see ``core/wire.py``) — the router never decodes
+    or re-encodes a command body, only peeks each sub-frame's cmd_id.
+    Fault interposition is unchanged: relayed envelopes leave through the
+    normal Send effect, so every nemesis schedule sees the same
+    pre-encoded message view it would for any other send.
     """
 
     def __init__(
@@ -60,21 +85,33 @@ class ShardRouter(Node):
         leader_providers: Sequence[Callable[[], Optional[Address]]],
         *,
         batch=None,
+        affinity_run: int = 1,
     ):
         super().__init__(addr, batch=batch)
         self.leader_providers = list(leader_providers)
+        # Must match the deployment's shard_of_command run parameter —
+        # every hop that maps cmd_id -> shard has to agree.
+        self.affinity_run = affinity_run
         # telemetry
         self.routed = 0
         self.routed_by_shard: Dict[int, int] = {}
         self.unroutable = 0
+        self.relayed = 0            # sub-frames forwarded via the relay
+        self.relayed_by_shard: Dict[int, int] = {}
+        self.relay_batches = 0      # SealedBatch envelopes relayed onward
+        self.relay_sliced = 0       # sub-frames forwarded as byte slices
+        self.relay_decoded = 0      # sub-frames that needed a full decode
 
     @property
     def num_shards(self) -> int:
         return len(self.leader_providers)
 
+    def _route(self, cmd_id) -> Optional[int]:
+        return shard_of_command(cmd_id, self.num_shards, self.affinity_run)
+
     @on(m.ClientRequest)
     def _on_request(self, src: Address, msg: m.ClientRequest) -> None:
-        shard = shard_of_command(msg.command.cmd_id, self.num_shards)
+        shard = self._route(msg.command.cmd_id)
         leader = self.leader_providers[shard]()
         if leader is None:
             self.unroutable += 1  # client retry re-enters here
@@ -82,6 +119,65 @@ class ShardRouter(Node):
         self.routed += 1
         self.routed_by_shard[shard] = self.routed_by_shard.get(shard, 0) + 1
         self.send(leader, msg)
+
+    @on(m.SealedBatch)
+    def _on_sealed(self, src: Address, batch: m.SealedBatch) -> None:
+        """Relay a sealed request batch: regroup sub-frames per shard
+        leader and forward each group as one onward SealedBatch.  Order
+        within each (client, leader) pair is preserved — groups keep the
+        received sub-frame order — so per-destination FIFO matches the
+        decode/re-dispatch baseline exactly."""
+        from . import wire  # lazy: client.py stays transport-agnostic
+
+        if batch.raw is not None and batch.spans is not None:
+            # Byte path (tcp/proc): peek each sub-frame's cmd_id, group
+            # spans, and forward slices of the received buffer.
+            raw = batch.raw
+            groups: Dict[Address, List[Tuple[int, int]]] = {}
+            for span in batch.spans:
+                cmd_id = wire.peek_request_cmd_id(raw, span)
+                if cmd_id is None:
+                    # Not a ClientRequest: decode this one sub-frame and
+                    # dispatch it like a directly-received message.
+                    self.relay_decoded += 1
+                    self.on_message(src, wire.sealed_messages(raw, (span,))[0])
+                    continue
+                shard = self._route(cmd_id)
+                leader = self.leader_providers[shard]()
+                if leader is None:
+                    self.unroutable += 1
+                    continue
+                self.relay_sliced += 1
+                self._note_relay(shard)
+                groups.setdefault(leader, []).append(span)
+            for leader, spans in groups.items():
+                self.relay_batches += 1
+                self.send(leader, m.SealedBatch(raw=raw, spans=tuple(spans)))
+            return
+        # Object path (the simulator: messages never serialize).  Same
+        # grouping over live message objects.
+        obj_groups: Dict[Address, List[Any]] = {}
+        for sub in batch.messages:
+            if type(sub) is not m.ClientRequest:
+                self.relay_decoded += 1
+                self.on_message(src, sub)
+                continue
+            shard = self._route(sub.command.cmd_id)
+            leader = self.leader_providers[shard]()
+            if leader is None:
+                self.unroutable += 1
+                continue
+            self._note_relay(shard)
+            obj_groups.setdefault(leader, []).append(sub)
+        for leader, msgs in obj_groups.items():
+            self.relay_batches += 1
+            self.send(leader, m.SealedBatch(messages=tuple(msgs)))
+
+    def _note_relay(self, shard: int) -> None:
+        self.routed += 1
+        self.routed_by_shard[shard] = self.routed_by_shard.get(shard, 0) + 1
+        self.relayed += 1
+        self.relayed_by_shard[shard] = self.relayed_by_shard.get(shard, 0) + 1
 
     @on(m.LeaderHint)
     def _on_leader_hint(self, src: Address, msg: m.LeaderHint) -> None:

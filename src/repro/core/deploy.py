@@ -183,6 +183,37 @@ class Deployment:
             "n": len(xs),
         }
 
+    def shard_telemetry(self) -> Dict[str, Any]:
+        """Per-shard load/lag counters (the no-silent-imbalance surface):
+        router forwards and coalesced relays per shard, plus each
+        replica's backlog, per-shard chosen frontiers and execution-cursor
+        lag.  Benchmarks record this next to the throughput curve."""
+        tel: Dict[str, Any] = {"num_shards": self.num_shards}
+        if self.router is not None:
+            r = self.router
+            tel["router"] = {
+                "routed": r.routed,
+                "routed_by_shard": dict(r.routed_by_shard),
+                "relayed": r.relayed,
+                "relayed_by_shard": dict(r.relayed_by_shard),
+                "relay_batches": r.relay_batches,
+                "relay_sliced": r.relay_sliced,
+                "relay_decoded": r.relay_decoded,
+                "unroutable": r.unroutable,
+            }
+        tel["replicas"] = {
+            rep.addr: {
+                "backlog": rep.elog.backlog(),
+                "exec_watermark": rep.exec_watermark,
+                "shard_frontiers": rep.elog.shard_frontiers(),
+                "cursor_lag": rep.elog.cursor_lag(),
+                "acks_sent": rep.acks_sent,
+                "fill_requests": rep.fill_requests,
+            }
+            for rep in self.replicas
+        }
+        return tel
+
     def check_all(self) -> None:
         self.oracle.assert_safe()
         self.oracle.check_replicas(self.replicas)
@@ -261,6 +292,20 @@ class ClusterSpec:
     # client.  Uses the deployment's batch policy; requires
     # route_via_router and an Options.batch_max > 1 to have any effect.
     router_coalesce: bool = False
+    # Clients batch their own requests into SealedBatch envelopes (needs
+    # Options.batch_max > 1).  Routed via the router this is the zero-copy
+    # relay path: the router regroups the *encoded sub-frames* per shard
+    # leader instead of decode->re-dispatch->re-encode.  Routed
+    # client-side it simply coalesces the client's request egress.  Off
+    # by default — existing scenarios are unchanged.
+    client_coalesce: bool = False
+    # Affinity-run routing (opt-in): consecutive commands from one client
+    # map to the same shard in runs of this length, so a pipelined burst
+    # fills whole wire batches to ONE leader instead of fragmenting
+    # across every shard (see client.shard_of_command).  1 = historical
+    # per-command round-robin.  Every cmd_id->shard mapping in the
+    # deployment (client route closures, the router) uses this value.
+    shard_affinity_run: int = 1
 
     # -- address plan ----------------------------------------------------
     def matchmaker_addrs(self) -> Tuple[str, ...]:
@@ -347,6 +392,10 @@ class ClusterSpec:
                 batch=batch,
                 num_shards=S,
                 ack_stride=self.replica_ack_stride(),
+                # Per-shard proposer groups: replication acks rotate one
+                # group per stride and fill requests target the shard
+                # that owns the execution hole (O(1) instead of O(S)).
+                leader_groups=tuple(shard_prop_addrs),
             )
             for a in rep_addrs
         ]
@@ -398,18 +447,23 @@ class ClusterSpec:
                 self.router_addr(),
                 [lambda s=s: shard_leader_addr(s) for s in range(S)],
                 batch=batch if self.router_coalesce else None,
+                affinity_run=self.shard_affinity_run,
             )
 
+        run = self.shard_affinity_run
         if self.route_via_router:
             leader_provider = lambda: self.router_addr()  # noqa: E731
             route = None
         elif S > 1:
             leader_provider = current_leader
-            route = lambda cid: shard_leader_addr(shard_of_command(cid, S))  # noqa: E731
+            route = lambda cid: shard_leader_addr(shard_of_command(cid, S, run))  # noqa: E731
         else:
             leader_provider = current_leader
             route = None
 
+        client_batch = (
+            opts.batch_policy(sealed=True) if self.client_coalesce else None
+        )
         clients = [
             Client(
                 f"c{i}",
@@ -418,6 +472,7 @@ class ClusterSpec:
                 max_commands=self.client_max_commands,
                 retry_timeout=self.client_retry_timeout,
                 route=route,
+                batch=client_batch,
             )
             for i in range(self.n_clients)
         ]

@@ -212,6 +212,9 @@ class ExecutionLog:
         self.watermark = 0  # slots < this executed
         self.max_slot = -1  # highest slot ever inserted (frontier)
         self.num_shards = max(1, num_shards)
+        # Per-shard chosen frontier, maintained incrementally on insert so
+        # telemetry reads are O(num_shards), never O(entries).
+        self._frontiers: Dict[int, int] = {}
 
     def insert(self, slot: int, value: Any) -> Optional[Any]:
         """Record a chosen value.  Returns the previous value if the slot
@@ -220,6 +223,10 @@ class ExecutionLog:
         self.entries[slot] = value
         if slot > self.max_slot:
             self.max_slot = slot
+        if prev is None:
+            s = slot % self.num_shards
+            if slot >= self._frontiers.get(s, 0):
+                self._frontiers[s] = slot + 1
         return prev
 
     def drain_executable(self) -> List[Tuple[int, Any]]:
@@ -232,12 +239,18 @@ class ExecutionLog:
 
     # -- pipelined-execution telemetry ------------------------------------
     def shard_frontiers(self) -> Dict[int, int]:
-        """Per-shard highest chosen slot + 1 (how far each stream ran)."""
-        fr: Dict[int, int] = {}
-        for slot in self.entries:
-            s = shard_of_slot(slot, self.num_shards)
-            fr[s] = max(fr.get(s, 0), slot + 1)
-        return fr
+        """Per-shard highest chosen slot + 1 (how far each stream ran).
+        Incremental (updated in :meth:`insert`), so surfacing it per run
+        summary costs O(num_shards)."""
+        return dict(self._frontiers)
+
+    def cursor_lag(self) -> Dict[int, int]:
+        """Per-shard execution-cursor lag: how far each shard's chosen
+        stream ran *ahead* of the contiguous execution watermark.  A shard
+        with lag 0 while the others pile up is the slow stream stalling
+        the slot-order execution loop."""
+        w = self.watermark
+        return {s: max(0, f - w) for s, f in self._frontiers.items()}
 
     def backlog(self) -> int:
         """Chosen-but-not-executable entries (blocked on another shard's

@@ -60,6 +60,72 @@ class Batch:
         return f"Batch[{len(self.messages)}]"
 
 
+class SealedBatch:
+    """A relay-safe batch envelope (the zero-copy router fast path).
+
+    ``Batch`` shares one string-intern table across its sub-messages, so a
+    relay cannot forward a *subset* of an encoded Batch without re-encoding
+    (a back-reference may point at a string owned by a sub-message that
+    stayed behind).  A SealedBatch instead encodes every sub-message as a
+    self-contained length-prefixed sub-frame with its own intern scope:
+    a router can split a received frame into per-shard onward frames by
+    slicing the already-encoded bytes, never decoding the commands.
+
+    Two construction modes:
+
+      * ``SealedBatch(messages=...)`` — a sender-side envelope holding
+        live message objects (the simulator path, and the encoder's
+        slow path).
+      * ``SealedBatch(raw=..., spans=...)`` — a decoded/relayed view:
+        ``raw`` is the encoded payload buffer and ``spans`` the
+        ``(start, end)`` byte range of each sub-frame.  ``messages``
+        decodes lazily on first access, so a pure relay hop never pays
+        for decoding command bodies.
+
+    Receivers unwrap it exactly like ``Batch`` (kernel dispatch loop), so
+    handler semantics are identical with either envelope.
+    """
+
+    __slots__ = ("_messages", "raw", "spans")
+
+    def __init__(
+        self,
+        messages: Optional[Tuple[Any, ...]] = None,
+        *,
+        raw: Optional[bytes] = None,
+        spans: Optional[Tuple[Tuple[int, int], ...]] = None,
+    ):
+        if messages is None and (raw is None or spans is None):
+            raise ValueError("SealedBatch needs messages or raw+spans")
+        self._messages = tuple(messages) if messages is not None else None
+        self.raw = raw
+        self.spans = tuple(spans) if spans is not None else None
+
+    def __len__(self) -> int:
+        if self.spans is not None:
+            return len(self.spans)
+        return len(self._messages)
+
+    @property
+    def messages(self) -> Tuple[Any, ...]:
+        if self._messages is None:
+            from . import wire  # lazy: messages must not import the codec
+
+            self._messages = wire.sealed_messages(self.raw, self.spans)
+        return self._messages
+
+    def __eq__(self, other: Any) -> bool:
+        if not isinstance(other, SealedBatch):
+            return NotImplemented
+        return self.messages == other.messages
+
+    def __hash__(self) -> int:
+        return hash(self.messages)
+
+    def __repr__(self) -> str:
+        return f"SealedBatch[{len(self)}]"
+
+
 # --------------------------------------------------------------------------
 # Client <-> proposer / replica
 # --------------------------------------------------------------------------

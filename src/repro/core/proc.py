@@ -276,6 +276,9 @@ def build_worker_node(spec: Any, addr: Address, workdir: Path) -> ProtocolNode:
             batch=batch,
             num_shards=S,
             ack_stride=spec.replica_ack_stride(),
+            leader_groups=tuple(
+                spec.shard_proposer_addrs(s) for s in range(S)
+            ),
         )
     for s in range(S):
         props = spec.shard_proposer_addrs(s)
@@ -303,6 +306,7 @@ def build_worker_node(spec: Any, addr: Address, workdir: Path) -> ProtocolNode:
             addr,
             [FileLeaderProvider(str(leaders_path(workdir)), s) for s in range(S)],
             batch=batch if spec.router_coalesce else None,
+            affinity_run=getattr(spec, "shard_affinity_run", 1),
         )
     raise ValueError(f"no role for address {addr!r} in this spec")
 
@@ -1455,15 +1459,22 @@ def deploy_proc(
     dep = ProcDeployment(spec, transport, sup)
 
     S = max(1, spec.num_shards)
+    run = getattr(spec, "shard_affinity_run", 1)
     if spec.route_via_router:
         leader_provider = lambda: spec.router_addr()  # noqa: E731
         route = None
     elif S > 1:
         leader_provider = lambda: sup.leader_of(0)  # noqa: E731
-        route = lambda cid: sup.leader_of(shard_of_command(cid, S))  # noqa: E731
+        route = lambda cid: sup.leader_of(shard_of_command(cid, S, run))  # noqa: E731
     else:
         leader_provider = lambda: sup.leader_of(0)  # noqa: E731
         route = None
+    opts = spec.options or Options()
+    client_batch = (
+        opts.batch_policy(sealed=True)
+        if getattr(spec, "client_coalesce", False)
+        else None
+    )
     for i in range(spec.n_clients):
         client = Client(
             f"c{i}",
@@ -1472,6 +1483,7 @@ def deploy_proc(
             max_commands=spec.client_max_commands,
             retry_timeout=spec.client_retry_timeout,
             route=route,
+            batch=client_batch,
         )
         transport.register(client)
         dep.clients.append(client)

@@ -64,11 +64,12 @@ class Options:
     # batches.  See benchmarks/bench_batching.py for the tradeoff.
     batch_flush_adaptive: bool = False
 
-    def batch_policy(self) -> BatchPolicy:
+    def batch_policy(self, *, sealed: bool = False) -> BatchPolicy:
         return BatchPolicy(
             max_batch=self.batch_max,
             flush_interval=self.batch_flush_interval,
             adaptive=self.batch_flush_adaptive,
+            sealed=sealed,
         )
 
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from . import messages as m
-from .log import ExecutionLog
+from .log import ExecutionLog, shard_of_slot
 from .runtime import BatchPolicy, on
 from .sim import Address, Node
 
@@ -74,6 +74,7 @@ class Replica(Node):
         num_shards: int = 1,
         fill_interval: float = 0.01,
         ack_stride: int = 1,
+        leader_groups: Tuple[Tuple[Address, ...], ...] = (),
     ):
         super().__init__(addr, batch=batch)
         self.sm_factory = sm_factory
@@ -83,12 +84,30 @@ class Replica(Node):
         # Peer replicas, for the disk-loss re-sync path (RecoverA to the
         # peers; any one live peer's RecoverB restores the whole prefix).
         self.peers = tuple(p for p in peers if p != addr)
-        # Replication-watermark acks fan out to EVERY shard's proposers;
-        # with many shards that is the replica's dominant egress, so acks
-        # coalesce to every ``ack_stride`` executed slots (stride 1 = the
-        # historical ack-per-progression).  The fill timer flushes the
-        # final partial stride at quiescence.
+        # Replication-watermark acks used to fan out to EVERY shard's
+        # proposers — O(num_shards) egress per ack, the replicas' dominant
+        # cost at 4+ shards.  Acks coalesce to every ``ack_stride``
+        # executed slots (stride 1 = the historical ack-per-progression)
+        # and, when ``leader_groups`` supplies the per-shard proposer
+        # groups, each stride's ack *rotates* to one group — O(1) egress
+        # per stride.  Safe because the watermark is monotone and
+        # AckTracker max-merges: a leader acting on a stale (lower)
+        # watermark only GCs later, never earlier.  The fill timer
+        # re-broadcasts the watermark to every group at quiescence, so no
+        # leader lags more than one fill interval.
         self.ack_stride = max(1, ack_stride)
+        self.leader_groups = tuple(tuple(g) for g in leader_groups) or (
+            (tuple(leader_addrs),) if leader_addrs else ()
+        )
+        # Stagger the rotation start per replica so the leader groups
+        # hear from *different* replicas each stride (GC wants f+1
+        # replica acks per leader to keep advancing between broadcasts).
+        self._ack_rr = (
+            sum(addr.encode()) % len(self.leader_groups)
+            if self.leader_groups
+            else 0
+        )
+        self._acked_all_at = 0  # exec watermark last broadcast to all groups
         self._last_acked = 0
         self.executed: Dict[Tuple[str, int], Any] = {}  # cmd_id -> result (dedup)
         # Sharded log plane: an idle shard leaves holes that block the
@@ -97,6 +116,7 @@ class Replica(Node):
         # noop-fill (Mencius-style skip).  Only armed when sharded.
         self.fill_interval = fill_interval
         self._fill_stuck_at = -1
+        self._fill_targeted = False
         # Disk-loss fault model (nemesis.DiskLoss): set while this
         # replica's persisted state is gone and a re-sync is owed.
         self._disk_lost = False
@@ -107,6 +127,7 @@ class Replica(Node):
         # telemetry
         self.executions = 0
         self.fill_requests = 0
+        self.acks_sent = 0
         self.disk_losses = 0
         self.resyncs = 0
 
@@ -144,6 +165,7 @@ class Replica(Node):
         self.elog.watermark = state["watermark"]
         self.executed = dict(state["executed"])
         self._last_acked = state["last_acked"]
+        self._acked_all_at = 0  # force a full ack broadcast post-recovery
         # Rebuild the SM by replaying the executed prefix with the same
         # at-most-once rule live execution used; no messages are emitted.
         self.sm = self.sm_factory()
@@ -169,7 +191,9 @@ class Replica(Node):
         self.sm = self.sm_factory()
         self.executed.clear()
         self._last_acked = 0
+        self._acked_all_at = 0
         self._fill_stuck_at = -1
+        self._fill_targeted = False
         self._disk_lost = True
         if not self.failed:
             self._resync()
@@ -215,20 +239,42 @@ class Replica(Node):
             self._send_acks()
 
     def _fill_tick(self) -> None:
-        if self.exec_watermark != self._last_acked:
-            self._send_acks()  # flush the partial ack stride
+        if self.exec_watermark != self._acked_all_at:
+            # Flush the partial ack stride AND re-sync every leader group
+            # the rotation skipped since the last tick (quiescence
+            # convergence for GC Scenario 3).
+            self._send_acks(everyone=True)
         if self.elog.backlog() > 0:
             if self.elog.watermark == self._fill_stuck_at:
-                # Stuck a full interval: ask every shard to fill its
-                # stream up through the highest slot we know about, so
-                # one round-trip closes every hole below the frontier.
                 self.fill_requests += 1
-                for p in self.leader_addrs:
-                    self.send(p, m.FillRequest(slot=self.elog.max_slot))
+                if self._fill_targeted:
+                    # A targeted request already failed to unstick us
+                    # (that shard's leader may be down): escalate to
+                    # every shard so one round-trip closes every hole
+                    # below the frontier.
+                    for p in self.leader_addrs:
+                        self.send(p, m.FillRequest(slot=self.elog.max_slot))
+                    self._fill_targeted = False
+                else:
+                    # The execution hole at the watermark belongs to
+                    # exactly one shard; ask only its proposer group
+                    # (O(1) fill traffic instead of O(num_shards)).
+                    owner = shard_of_slot(self.elog.watermark, self.elog.num_shards)
+                    for p in self._group_for(owner):
+                        self.send(p, m.FillRequest(slot=self.elog.max_slot))
+                    self._fill_targeted = True
+            else:
+                self._fill_targeted = False  # progressed since last tick
             self._fill_stuck_at = self.elog.watermark
         else:
             self._fill_stuck_at = -1
+            self._fill_targeted = False
         self.set_timer(self.fill_interval, self._fill_tick)
+
+    def _group_for(self, shard: int) -> Tuple[Address, ...]:
+        if len(self.leader_groups) == self.elog.num_shards:
+            return self.leader_groups[shard]
+        return tuple(self.leader_addrs)
 
     # Historical views: ``log`` is the slot -> value dict, ``exec_watermark``
     # the executed-prefix bound (tests, invariant checker, recovery).
@@ -264,10 +310,23 @@ class Replica(Node):
         if progressed and self.exec_watermark - self._last_acked >= self.ack_stride:
             self._send_acks()
 
-    def _send_acks(self) -> None:
-        # Scenario 3: tell leaders how much of the prefix we hold.
+    def _send_acks(self, everyone: bool = False) -> None:
+        # Scenario 3: tell leaders how much of the prefix we hold.  On
+        # the hot path each stride's ack rotates to ONE shard's proposer
+        # group (O(1) egress); ``everyone=True`` (the fill-tick flush and
+        # single-group deployments) broadcasts to every group so all
+        # leaders converge within one fill interval.
         self._last_acked = self.exec_watermark
-        for p in self.leader_addrs:
+        self.acks_sent += 1
+        groups = self.leader_groups
+        if everyone or len(groups) <= 1:
+            self._acked_all_at = self.exec_watermark
+            for p in self.leader_addrs:
+                self.send(p, m.ReplicaAck(watermark=self.exec_watermark))
+            return
+        group = groups[self._ack_rr % len(groups)]
+        self._ack_rr += 1
+        for p in group:
             self.send(p, m.ReplicaAck(watermark=self.exec_watermark))
 
     def _execute(self, value: Any) -> None:

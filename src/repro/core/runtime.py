@@ -162,6 +162,17 @@ class ProtocolNode:
         self._handlers: Dict[type, Callable[[Address, Any], None]] = {
             t: getattr(self, name) for t, name in self._dispatch_names.items()
         }
+        # A role that registers its own SealedBatch handler (the
+        # ShardRouter's zero-copy relay) must see the *envelope*, not the
+        # unwrapped sub-messages; resolve that once so the dispatch hot
+        # path stays a type check.
+        _sealed = self._handlers.get(m.SealedBatch)
+        self._sealed_override = (
+            _sealed
+            if _sealed is not None
+            and getattr(_sealed, "__func__", None) is not ProtocolNode._on_batch
+            else None
+        )
         self.batch = batch if batch is not None and batch.enabled else None
         self._batch_buf: Dict[Address, List[Any]] = {}
         self._batch_timer: Optional[TimerHandle] = None
@@ -256,7 +267,10 @@ class ProtocolNode:
         # dominant receive shape of the batched Section 8 deployment.
         handlers = self._handlers
         t = type(msg)
-        if t is m.Batch:
+        if t is m.Batch or t is m.SealedBatch:
+            if t is m.SealedBatch and self._sealed_override is not None:
+                self._sealed_override(src, msg)
+                return
             for sub in msg.messages:
                 handler = handlers.get(type(sub))
                 if handler is None:
@@ -270,11 +284,12 @@ class ProtocolNode:
             return
         handler(src, msg)
 
-    @on(m.Batch)
-    def _on_batch(self, src: Address, batch: m.Batch) -> None:
-        """Unwrap a batch envelope: handlers see per-message semantics.
-        (Kept registered for subclasses that dispatch through the table
-        directly; ``on_message`` takes the in-line fast path.)"""
+    @on(m.Batch, m.SealedBatch)
+    def _on_batch(self, src: Address, batch: Any) -> None:
+        """Unwrap a batch envelope (plain or sealed): handlers see
+        per-message semantics.  (Kept registered for subclasses that
+        dispatch through the table directly; ``on_message`` takes the
+        in-line fast path.)"""
         for sub in batch.messages:
             self.on_message(src, sub)
 
@@ -342,7 +357,13 @@ class ProtocolNode:
         msgs = self._batch_buf.pop(dst, None)
         if not msgs:
             return
-        if len(msgs) == 1:
+        if self.batch.sealed:
+            # Sealed flushes envelope even singletons: the router's relay
+            # fast path (and any FaultPlane storm aimed at it) must see
+            # every coalesced client burst as a SealedBatch boundary.
+            self.batches_sent += 1
+            self.emit(Send(dst=dst, msg=m.SealedBatch(messages=tuple(msgs))))
+        elif len(msgs) == 1:
             self.emit(Send(dst=dst, msg=msgs[0]))
         else:
             self.batches_sent += 1
@@ -363,7 +384,7 @@ class ProtocolNode:
 
 # ``__init_subclass__`` only fires for subclasses; seed the base table so a
 # bare ProtocolNode also unwraps batch envelopes.
-ProtocolNode._dispatch_names = {m.Batch: "_on_batch"}
+ProtocolNode._dispatch_names = {m.Batch: "_on_batch", m.SealedBatch: "_on_batch"}
 
 
 # --------------------------------------------------------------------------
@@ -411,6 +432,13 @@ class BatchPolicy:
     # fragments while still flushing far earlier than the fixed interval.
     adaptive: bool = False
     quiescence: float = 50e-6
+    # Sealed envelopes: flush coalesced buffers as ``messages.SealedBatch``
+    # (self-contained per-sub-message intern scopes) instead of ``Batch``.
+    # Costs a few bytes per repeated string on the wire; buys the router's
+    # zero-copy relay (forward sub-frames by slicing the received bytes).
+    # Senders whose batches terminate at their destination (leaders,
+    # acceptors, replicas) keep the tighter Batch encoding.
+    sealed: bool = False
 
     def __post_init__(self) -> None:
         self.batchable_set = frozenset(self.batchable)

@@ -22,6 +22,7 @@ The catalog (paper sections each one stresses):
   fast_paxos_recovery                   Section 7 (Algorithm 5)
   gc_during_failover                    Section 5 (Scenarios 1-3)
   shard_leader_failover                 sharded log plane (ARCHITECTURE)
+  router_storm                          router relay fast path (Layer 2.5)
   pause_during_reconfig                 gray failures (SIGSTOP; proc plane)
   clock_skew_churn                      Section 2.1 (no clock sync)
   ====================================  =============================
@@ -365,6 +366,56 @@ def _shard_leader_failover(seed: int) -> _Scenario:
     )
 
 
+def _router_storm(seed: int) -> _Scenario:
+    """Drop/dup/delay storm aimed straight at the ShardRouter while four
+    shards serve coalesced client traffic.  Clients batch their requests
+    into sealed envelopes (``client_coalesce=True``), so the router's
+    zero-copy relay fast path — slicing already-encoded sub-frames out of
+    a :class:`messages.SealedBatch` and re-grouping them per shard leader
+    — is exactly what the storm interposes on.  FaultPlane sees the
+    pre-encoded envelope view (SealedBatch is never re-wrapped), so every
+    drop/dup/delay decision lands on the same message boundaries the
+    relay slices at: dropped envelopes must be recovered by client
+    retries, duplicated ones deduplicated by command id, delayed ones
+    reordered across shards without breaking per-shard FIFO execution."""
+    rng = _rng("router_storm", seed)
+    spec = ClusterSpec(
+        f=1,
+        n_clients=4,
+        sm_factory=KVStoreSM,
+        client_retry_timeout=0.06,
+        options=Options(
+            phase2_retry_timeout=0.05,
+            batch_max=4,
+            batch_flush_interval=2e-3,
+        ),
+        num_shards=4,
+        route_via_router=True,
+        client_coalesce=True,
+    )
+    storm = Storm(
+        drop=rng.uniform(0.05, 0.2),
+        dup=rng.uniform(0.1, 0.3),
+        delay=rng.uniform(0.5e-3, 3e-3),
+        targets=(spec.router_addr(),),
+        tag="router-storm",
+    )
+    events = [
+        Event(0.02, StartClients()),
+        Event(_jitter(rng, 0.06), storm),
+        Event(_jitter(rng, 0.32), Heal()),
+        Event(0.48, StopClients()),
+    ]
+    return _Scenario(
+        cluster=spec,
+        schedule=Schedule("router_storm", seed, tuple(events)),
+        net=NetworkConfig(),
+        horizon=0.64,
+        steady_window=(0.02, 0.06),
+        faulty_window=(0.06, 0.45),
+    )
+
+
 def _replica_disk_loss(seed: int) -> _Scenario:
     """A replica crashes, its disk is wiped while down, and it restarts
     with nothing — the crash-recovery assumption (synchronously persisted
@@ -473,6 +524,7 @@ _BUILDERS: Dict[str, Callable[[int], _Scenario]] = {
     "acceptor_swap_storm": _acceptor_swap_storm,
     "gc_during_failover": _gc_during_failover,
     "shard_leader_failover": _shard_leader_failover,
+    "router_storm": _router_storm,
     "replica_disk_loss": _replica_disk_loss,
     "pause_during_reconfig": _pause_during_reconfig,
     "clock_skew_churn": _clock_skew_churn,

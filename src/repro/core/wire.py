@@ -577,6 +577,91 @@ def _dec_batch(r: _Reader) -> Tuple[Any, ...]:
 
 _register(7, m.Batch, _enc_batch, lambda r: m.Batch(messages=_dec_batch(r)))
 
+
+# -- SealedBatch: the relay-safe envelope (zero-copy router fast path) ------
+# Payload: [uvarint count] then per sub-message [uvarint len][tag][fields].
+# Unlike Batch, every sub-frame carries its OWN intern table (a fresh
+# _Writer per sub-message), so any subset of the encoded sub-frames is
+# itself a valid sequence of sub-frames: a relay forwards by slicing the
+# received bytes, and intern back-references can never dangle across a
+# split.  The price is re-interning shared strings per sub-message; the
+# win is that a router hop costs O(bytes moved), not O(decode + encode).
+def _enc_sealed(w: _Writer, x: "m.SealedBatch") -> None:
+    raw, spans = x.raw, x.spans
+    if raw is not None and spans is not None:
+        # Relay fast path: the sub-frames are already encoded (each is
+        # self-contained); re-emit the byte ranges verbatim.
+        _w_uvarint(w.out, len(spans))
+        for s, e in spans:
+            _w_uvarint(w.out, e - s)
+            w.out.append(raw[s:e])
+        return
+    msgs = x.messages
+    _w_uvarint(w.out, len(msgs))
+    for msg in msgs:
+        sub = encode(msg)  # fresh writer: self-contained intern scope
+        _w_uvarint(w.out, len(sub))
+        w.out.append(sub)
+
+
+def _dec_sealed(r: _Reader) -> "m.SealedBatch":
+    # Record sub-frame byte ranges WITHOUT decoding them — the lazy
+    # ``SealedBatch.messages`` property decodes on first access, so a
+    # relay hop (decode frame -> regroup spans -> re-frame) never touches
+    # the command bodies.
+    n = r.uvarint()
+    spans = []
+    for _ in range(n):
+        k = r.uvarint()
+        spans.append((r.pos, r.pos + k))
+        r.pos += k
+    return m.SealedBatch(raw=r.buf, spans=tuple(spans))
+
+
+_register(44, m.SealedBatch, _enc_sealed, _dec_sealed)
+
+
+def sealed_messages(
+    raw: bytes, spans: Tuple[Tuple[int, int], ...]
+) -> Tuple[Any, ...]:
+    """Decode a SealedBatch's sub-frames (each one self-contained)."""
+    return tuple(_decode_at(raw, s) for s, _e in spans)
+
+
+def _decode_at(buf: bytes, pos: int) -> Any:
+    """Decode one [tag][fields] sub-frame starting at ``pos`` in ``buf``
+    (a fresh intern scope, exactly like a top-level payload)."""
+    r = _Reader(buf, pos)
+    tag = r.u8()
+    if tag == _TAG_PICKLE:
+        return pickle.loads(r.take(r.uvarint()))
+    dec = _DECODERS.get(tag)
+    if dec is None:
+        raise ValueError(f"unknown wire tag {tag}")
+    return dec(r)
+
+
+def peek_request_cmd_id(
+    raw: bytes, span: Tuple[int, int]
+) -> Tuple[str, int] | None:
+    """Read the ``cmd_id`` of a ClientRequest sub-frame without decoding
+    the command body (the router's shard hash needs only the id).  Returns
+    None when the sub-frame is not a ClientRequest — the relay falls back
+    to full decode for those.
+
+    Safe on a self-contained sub-frame only: the leading client-address
+    string is by construction a literal there (fresh intern table), never
+    a back-reference into another sub-message."""
+    s, _e = span
+    if raw[s] != _TAG_CLIENT_REQUEST:
+        return None
+    r = _Reader(raw, s + 1)
+    client = _r_str(r)  # first string of the sub-frame: always a literal
+    return (client, r.varint())
+
+
+_TAG_CLIENT_REQUEST = 1  # must match the ClientRequest registration above
+
 # -- matchmaking (Algorithms 1 and 4) --------------------------------------
 
 

@@ -152,6 +152,47 @@ def test_execution_log_telemetry():
     assert fr[0] == 1 and fr[1] == 6
 
 
+def test_execution_log_frontiers_incremental_match_recompute():
+    """The O(S) incremental frontiers must equal a full recompute over
+    the entries, for any insert order (the telemetry the bench and
+    shard_telemetry() read on every row)."""
+    import random
+
+    rng = random.Random(7)
+    for shards in (1, 2, 4, 8):
+        e = ExecutionLog(num_shards=shards)
+        slots = list(range(60))
+        rng.shuffle(slots)
+        for s in slots[:40]:
+            e.insert(s, f"v{s}")
+            e.drain_executable()
+        expect = {}
+        for slot in e.entries:
+            sh = slot % shards
+            expect[sh] = max(expect.get(sh, 0), slot + 1)
+        assert e.shard_frontiers() == expect
+        lag = e.cursor_lag()
+        assert lag == {sh: max(0, f - e.watermark) for sh, f in expect.items()}
+        assert all(v >= 0 for v in lag.values())
+
+
+def test_execution_log_cursor_lag_flags_straggler_shard():
+    e = ExecutionLog(num_shards=2)
+    # Shard 1 races ahead (slots 1,3,5 chosen); shard 0 never fills slot
+    # 0, so the watermark is stuck and shard 1's cursor lag is visible.
+    for s in (1, 3, 5):
+        e.insert(s, "x")
+    e.drain_executable()
+    assert e.watermark == 0
+    assert e.cursor_lag()[1] == 6
+    e.insert(0, "x")
+    e.insert(2, "x")
+    e.insert(4, "x")
+    e.drain_executable()
+    assert e.watermark == 6
+    assert all(v == 0 for v in e.cursor_lag().values())
+
+
 # --------------------------------------------------------------------------
 # Shard routing
 # --------------------------------------------------------------------------
@@ -163,6 +204,30 @@ def test_shard_of_command_deterministic_and_balanced():
     assert shards[:4] != shards[1:5]  # actually cycling, not constant
     # deterministic across calls
     assert shards == [shard_of_command(("c0", s), 4) for s in range(1, 9)]
+
+
+def test_shard_of_command_affinity_runs():
+    """run > 1: each client's seqs advance shards in runs of `run`
+    consecutive commands (whole bursts land on one leader), runs still
+    cycle every shard, and run=1 stays the historical round robin."""
+    run = 16
+    shards = [shard_of_command(("c0", s), 4, run) for s in range(run * 8)]
+    # constant within each run...
+    for i in range(0, len(shards), run):
+        assert len(set(shards[i : i + run])) == 1
+    # ...cycling all shards across runs
+    run_heads = shards[::run]
+    assert sorted(set(run_heads)) == [0, 1, 2, 3]
+    assert run_heads[:4] == run_heads[4:]  # stable cycle
+    # balanced overall
+    from collections import Counter
+
+    counts = Counter(shards)
+    assert all(c == run * 2 for c in counts.values())
+    # run=1 is byte-for-byte the historical mapping
+    assert [shard_of_command(("c0", s), 4, 1) for s in range(32)] == [
+        shard_of_command(("c0", s), 4) for s in range(32)
+    ]
 
 
 def test_shard_router_forwards_by_shard():
